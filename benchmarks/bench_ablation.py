@@ -1,0 +1,46 @@
+"""Paper Fig 25: ablations — fixed model size (PPO2 only) and fixed training
+intensity (PPO1 only) vs full HAPFL. Metric: training latency reduction."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, save_json
+from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+
+
+def run(cfg, warmup, eval_rounds, seed=0, **flags):
+    env = FLEnvironment(cfg)
+    srv = HAPFLServer(env, seed=seed, **flags)
+    srv.pretrain_rl(warmup)
+    recs = [srv.run_round(latency_only=True) for _ in range(eval_rounds)]
+    return (float(np.mean([r.straggling for r in recs])),
+            float(np.mean([r.wall_time for r in recs])))
+
+
+def main(warmup: int = 2000, eval_rounds: int = 200, seed: int = 0):
+    cfg = FLSimConfig(dataset="mnist", n_train=800, n_test=100, seed=seed)
+    with Timer() as t:
+        full = run(cfg, warmup, eval_rounds, seed)
+        fixed_size = run(cfg, warmup, eval_rounds, seed, use_ppo1=False)
+        fixed_intensity = run(cfg, warmup, eval_rounds, seed, use_ppo2=False)
+    out = {
+        "hapfl": {"straggling": full[0], "wall": full[1]},
+        "fixed_size": {"straggling": fixed_size[0], "wall": fixed_size[1]},
+        "fixed_intensity": {"straggling": fixed_intensity[0],
+                            "wall": fixed_intensity[1]},
+        "latency_reduction_vs_fixed_size_pct":
+            round(100 * (1 - full[1] / fixed_size[1]), 2),
+        "latency_reduction_vs_fixed_intensity_pct":
+            round(100 * (1 - full[1] / fixed_intensity[1]), 2),
+    }
+    save_json("ablation", out)
+    emit("fig25_ablation_vs_fixed_size", t.seconds * 1e6 / (3 * eval_rounds),
+         f"latency_reduction={out['latency_reduction_vs_fixed_size_pct']}%")
+    emit("fig25_ablation_vs_fixed_intensity",
+         t.seconds * 1e6 / (3 * eval_rounds),
+         f"latency_reduction={out['latency_reduction_vs_fixed_intensity_pct']}%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference on CPU, plus
+the *derived* HBM-traffic model for the fused KD kernel on TPU (the actual
+win: one read of each logits tensor instead of ~6)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.kernels import ref
+from repro.kernels.ops import kd_loss_op, rmsnorm_op
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def main():
+    out = {}
+    N, V = 512, 8192
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N, V))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (N, V))
+    lab = jax.random.randint(jax.random.fold_in(key, 2), (N,), 0, V)
+
+    ref_fn = jax.jit(lambda a, b, l: ref.kd_loss_ref(a, b, l))
+    us_ref = _time(ref_fn, x, y, lab)
+    emit("kd_loss_xla_ref", us_ref, f"N={N};V={V}")
+    # derived traffic model (bytes over HBM), fp32 logits:
+    naive_reads = 6 * N * V * 4      # 2 softmax + 2 logsoftmax + 2 gathers
+    fused_reads = 2 * N * V * 4      # one pass over x and y
+    emit("kd_loss_fused_traffic_model", 0.0,
+         f"naive_bytes={naive_reads};fused_bytes={fused_reads};"
+         f"saving={naive_reads / fused_reads:.1f}x")
+    out["kd_traffic_saving_x"] = naive_reads / fused_reads
+
+    xs = jax.random.normal(key, (2048, 1024)).astype(jnp.bfloat16)
+    sc = jnp.ones((1024,), jnp.bfloat16)
+    ref_rms = jax.jit(lambda a, s: ref.rmsnorm_ref(a, s))
+    emit("rmsnorm_xla_ref", _time(ref_rms, xs, sc), "N=2048;d=1024")
+    save_json("kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and prints
+per (arch x shape x mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS / HLO_FLOPs usefulness ratio, and HBM fit.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit, save_csv
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_all(tag_filter=""):
+    from repro.launch.roofline_fixup import inner_scan_fixup
+    rows = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("skipped"):
+            continue
+        d["_file"] = p.name
+        try:
+            d = inner_scan_fixup(d)
+        except Exception:
+            for k in ("compute_s", "memory_s", "collective_s"):
+                d[k + "_fixed"] = d.get(k)
+            d["dominant_fixed"] = d.get("dominant")
+        rows.append(d)
+    return rows
+
+
+def main():
+    rows = load_all()
+    if not rows:
+        print("no dry-run artifacts yet; run: python -m repro.launch.dryrun")
+        return {}
+    table = []
+    for d in rows:
+        mem_gb = (d["memory"].get("temp_size_in_bytes") or 0) / 1e9
+        arg_gb = (d["memory"].get("argument_size_in_bytes") or 0) / 1e9
+        fits = (mem_gb + arg_gb) <= 16.0
+        ratio = d.get("useful_flops_ratio")
+        table.append([
+            d["arch"], d["shape"], d["mesh"], d.get("variant", ""),
+            f"{d['compute_s_fixed']:.4f}", f"{d['memory_s_fixed']:.4f}",
+            f"{d['collective_s_fixed']:.4f}", d["dominant_fixed"],
+            f"{ratio:.3f}" if ratio else "",
+            f"{mem_gb + arg_gb:.2f}", fits,
+        ])
+        base = f"{d['arch']}_{d['shape']}_" + \
+            ("multipod" if "pod" in d["mesh"] else "singlepod")
+        emit(f"roofline_{base}", 0.0,
+             f"dom={d['dominant_fixed']};"
+             f"c={d['compute_s_fixed']:.3f};m={d['memory_s_fixed']:.3f};"
+             f"n={d['collective_s_fixed']:.3f};fit={fits}")
+    save_csv("roofline", table,
+             ["arch", "shape", "mesh", "variant", "compute_s", "memory_s",
+              "collective_s", "dominant", "useful_flops_ratio",
+              "hbm_gb", "fits_hbm"])
+    n_fit = sum(1 for r in table if r[-1])
+    print(f"# roofline rows: {len(table)}, fit 16GB HBM: {n_fit}")
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig 24: scalability of heterogeneous model allocation.
+
+Setups (paper §V.C.4): (a) 10 clients / 10x disparity / 2 sizes,
+(b) 20 clients / 20x disparity / 3 sizes, (c) 100 clients / 50x / 3 sizes.
+Metric: straggling-latency reduction vs fixed-intensity FedAvg.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, save_json
+from repro.fl import BaselineRunner, FLEnvironment, FLSimConfig, HAPFLServer
+
+
+def reduction(cfg, warmup, eval_rounds, seed=0):
+    env = FLEnvironment(cfg)
+    srv = HAPFLServer(env, seed=seed)
+    srv.pretrain_rl(warmup)
+    h = np.mean([srv.run_round(latency_only=True).straggling
+                 for _ in range(eval_rounds)])
+    env2 = FLEnvironment(cfg)
+    size = list(env2.pool)[0]
+    f = []
+    for r in range(eval_rounds):
+        clients = env2.select_clients()
+        times = [env2.latency.local_train_time(
+            env2.profiles[c], r, size, cfg.default_epochs, include_lite=False)
+            for c in clients]
+        f.append(max(times) - min(times))
+    return float(100 * (1 - h / np.mean(f)))
+
+
+def main(warmup: int = 4000, eval_rounds: int = 200, seed: int = 0):
+    setups = [
+        ("10c_10x_2sizes", FLSimConfig(n_clients=10, k_per_round=6,
+                                       max_speed_ratio=10,
+                                       size_names=("small", "large"),
+                                       n_train=800, n_test=100, seed=seed)),
+        ("20c_20x_3sizes", FLSimConfig(n_clients=20, k_per_round=10,
+                                       max_speed_ratio=20,
+                                       size_names=("small", "medium", "large"),
+                                       n_train=1500, n_test=100, seed=seed)),
+        ("100c_50x_3sizes", FLSimConfig(n_clients=100, k_per_round=20,
+                                        max_speed_ratio=50,
+                                        size_names=("small", "medium", "large"),
+                                        n_train=4000, n_test=100, seed=seed)),
+    ]
+    out = {}
+    for name, cfg in setups:
+        with Timer() as t:
+            # larger client pools need proportionally more PPO updates
+            w = warmup * 2 if cfg.n_clients >= 100 else warmup
+            red = reduction(cfg, w, eval_rounds, seed)
+        out[name] = {"straggling_reduction_pct": round(red, 2),
+                     "seconds": round(t.seconds, 1)}
+        emit(f"fig24_scalability_{name}", t.seconds * 1e6 / eval_rounds,
+             f"straggling_reduction={red:.1f}%")
+    save_json("scalability", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

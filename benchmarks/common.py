@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: CSV emit + artifact dirs."""
+from __future__ import annotations
+
+import csv
+import json
+import time
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts"
+BENCH_DIR = ARTIFACTS / "bench"
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The harness's CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, obj):
+    BENCH_DIR.mkdir(parents=True, exist_ok=True)
+    (BENCH_DIR / f"{name}.json").write_text(json.dumps(obj, indent=1,
+                                                       default=str))
+
+
+def save_csv(name: str, rows, header):
+    BENCH_DIR.mkdir(parents=True, exist_ok=True)
+    with open(BENCH_DIR / f"{name}.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

@@ -1,0 +1,87 @@
+"""Benchmark harness — one entry per paper table/figure (+ roofline/kernels).
+
+Prints ``name,us_per_call,derived`` CSV rows; JSON/CSV artifacts land in
+artifacts/bench/. Budget knobs keep the default full run CPU-tractable;
+--quick shrinks everything for smoke validation.
+
+  fig2/fig3   bench_rl          PPO reward curves
+  fig4-21     bench_accuracy    accuracy/loss vs FedAvg/FedProx (+Tab III/IV)
+  fig22/23    bench_latency     straggling latency + overall training time
+  fig24       bench_scalability 20/100-client model-allocation scaling
+  fig25       bench_ablation    fixed-size / fixed-intensity ablations
+  (ours)      bench_roofline    dry-run roofline table
+  (ours)      bench_kernels     kernel traffic models / CPU timings
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny budgets (CI smoke)")
+    ap.add_argument("--only", default="",
+                    help="comma list: rl,accuracy,latency,scalability,"
+                         "ablation,roofline,kernels")
+    ap.add_argument("--datasets", default="mnist",
+                    help="comma list for accuracy bench")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    q = args.quick
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    failures = []
+
+    def run(name, fn):
+        if not want(name):
+            return
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+
+    if want("rl"):
+        from benchmarks import bench_rl
+        run("rl", lambda: bench_rl.main(rounds=300 if q else 2000))
+    if want("latency"):
+        from benchmarks import bench_latency
+        run("latency", lambda: bench_latency.main(
+            datasets=("mnist",) if q else ("mnist", "cifar10", "imagenet10"),
+            warmup=300 if q else 2000, eval_rounds=50 if q else 200))
+    if want("accuracy"):
+        from benchmarks import bench_accuracy
+        for ds in args.datasets.split(","):
+            run("accuracy", lambda ds=ds: bench_accuracy.main(
+                dataset=ds, rounds=6 if q else 25,
+                warmup=200 if q else 1000,
+                n_train=800 if q else 2000,
+                default_epochs=6 if q else 10))
+    if want("scalability"):
+        from benchmarks import bench_scalability
+        run("scalability", lambda: bench_scalability.main(
+            warmup=300 if q else 4000, eval_rounds=50 if q else 200))
+    if want("ablation"):
+        from benchmarks import bench_ablation
+        run("ablation", lambda: bench_ablation.main(
+            warmup=300 if q else 4000, eval_rounds=50 if q else 200))
+    if want("roofline"):
+        from benchmarks import bench_roofline
+        run("roofline", bench_roofline.main)
+    if want("kernels"):
+        from benchmarks import bench_kernels
+        run("kernels", bench_kernels.main)
+
+    if failures:
+        print(f"# FAILED benches: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""HAPFL-JAX: heterogeneity-aware personalized FL via dual-agent RL,
+scaled to a multi-pod JAX/Pallas training + serving framework.
+
+Subpackages: core (the paper), models, kernels, fl, train, serve, optim,
+data, checkpoint, configs, launch. See README.md / DESIGN.md.
+"""
+__version__ = "1.0.0"

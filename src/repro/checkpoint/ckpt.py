@@ -1,0 +1,58 @@
+"""Checkpointing: pytree -> flat npz + json structure (orbax not available).
+
+Works for params, optimizer states, and mixed pytrees of jnp/np arrays.
+bf16 arrays are stored via a uint16 view (npz has no bfloat16).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey) else str(p.idx)
+            for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(path, tree, step: int = 0):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    arrays, meta = {}, {"step": step, "leaves": {}}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            meta["leaves"][k] = "bfloat16"
+            arr = arr.view(np.uint16)
+        else:
+            meta["leaves"][k] = str(arr.dtype)
+        arrays[k] = arr
+    np.savez(str(path) + ".npz", **arrays)
+    Path(str(path) + ".json").write_text(json.dumps(meta))
+
+
+def load_checkpoint(path, like) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (a pytree of arrays/structs)."""
+    meta = json.loads(Path(str(path) + ".json").read_text())
+    data = np.load(str(path) + ".npz")
+    flat_like = _flatten(like)
+    restored = {}
+    for k in flat_like:
+        arr = data[k]
+        if meta["leaves"][k] == "bfloat16":
+            arr = jnp.asarray(arr.view(np.uint16)).view(jnp.bfloat16)
+        restored[k] = jnp.asarray(arr)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    new_leaves = [restored[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta["step"]

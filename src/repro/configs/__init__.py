@@ -1,0 +1,3 @@
+"""Config registry: ``get_config("<arch-id>")`` + shape registry."""
+from repro.configs.base import ModelConfig, ShapeConfig, INPUT_SHAPES
+from repro.configs.registry import ARCH_IDS, get_config, all_configs

@@ -1,0 +1,19 @@
+"""HAPFL core — the paper's contribution.
+
+  ppo          — PPO actor/critic (shared by both agents)
+  allocation   — PPO1: heterogeneous model allocation
+  intensity    — PPO2: training-intensity adjustment
+  distill      — KD-based mutual learning (LiteModel <-> local model)
+  aggregation  — entropy + accuracy weighted aggregation
+  latency      — client performance / straggling-latency model
+"""
+from repro.core.ppo import PPOAgent, PPOConfig, discounted_returns
+from repro.core.allocation import ModelAllocator
+from repro.core.intensity import IntensityAllocator
+from repro.core.distill import (mutual_losses, make_mutual_train_step,
+                                make_single_train_step, LAMBDAS)
+from repro.core.aggregation import (information_entropy, aggregation_weights,
+                                    weighted_aggregate, fedavg_aggregate,
+                                    group_aggregate)
+from repro.core.latency import (ClientProfile, LatencyModel,
+                                make_heterogeneous_clients, straggling_latency)

@@ -1,0 +1,76 @@
+"""Global model aggregation (paper §IV.E, Eqs. 36-39).
+
+Weights combine dataset information entropy and post-training accuracy:
+    W = 1/2 (softmax(H) + softmax(acc))
+LiteModels aggregate globally; heterogeneous local models aggregate per
+size group (Eq. 5). Eq. 39's update is applied in delta form
+``theta_global + sum_i W_i (theta_i - theta_global)`` which equals the
+W-weighted average when sum W = 1 (it does, by construction).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.utils.pytree import tree_weighted_sum
+
+
+def information_entropy(class_counts: Sequence[int]) -> float:
+    """Eq. 36-37 over a client's label histogram."""
+    counts = np.asarray(class_counts, dtype=np.float64)
+    total = counts.sum()
+    if total == 0:
+        return 0.0
+    q = counts[counts > 0] / total
+    return float(-np.sum(q * np.log2(q)))
+
+
+def _softmax(v: np.ndarray) -> np.ndarray:
+    v = np.asarray(v, np.float64)
+    e = np.exp(v - v.max())
+    return e / e.sum()
+
+
+def aggregation_weights(entropies: Sequence[float],
+                        accuracies: Sequence[float]) -> np.ndarray:
+    """Eq. 38."""
+    return 0.5 * (_softmax(np.asarray(entropies))
+                  + _softmax(np.asarray(accuracies)))
+
+
+def weighted_aggregate(global_params, client_params: List,
+                       weights: Sequence[float]):
+    """Eq. 39 (delta form): theta + sum W_i (theta_i - theta)."""
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+    avg = tree_weighted_sum(client_params, list(w.astype(np.float32)))
+    import jax
+    return jax.tree_util.tree_map(
+        lambda g, a: (g + (a - g)).astype(g.dtype), global_params, avg)
+
+
+def fedavg_aggregate(client_params: List, sizes: Sequence[int] = None):
+    """Eq. 4 / FedAvg: (dataset-size weighted) parameter mean."""
+    n = len(client_params)
+    if sizes is None:
+        w = [1.0 / n] * n
+    else:
+        tot = float(sum(sizes))
+        w = [s / tot for s in sizes]
+    return tree_weighted_sum(client_params, w)
+
+
+def group_aggregate(global_by_size: Dict[str, object],
+                    client_params: List, client_sizes: List[str],
+                    entropies: Sequence[float], accuracies: Sequence[float],
+                    ) -> Dict[str, object]:
+    """Eq. 5 + Eq. 38-39: aggregate same-sized local models per group."""
+    out = dict(global_by_size)
+    for size in set(client_sizes):
+        idx = [i for i, s in enumerate(client_sizes) if s == size]
+        w = aggregation_weights([entropies[i] for i in idx],
+                                [accuracies[i] for i in idx])
+        out[size] = weighted_aggregate(global_by_size[size],
+                                       [client_params[i] for i in idx], w)
+    return out

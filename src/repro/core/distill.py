@@ -1,0 +1,93 @@
+"""Knowledge-distillation mutual learning (paper §IV.D, Eqs. 33-35).
+
+Every client trains two models on the same batch:
+  local model : L1 = lambda1 * CE + lambda2 * KL(local || sg(lite))
+  LiteModel   : L2 = lambda3 * CE + lambda4 * KL(lite || sg(local))
+Used both by the CNN FL simulation and (via repro.kernels.mutual_kd_loss)
+the transformer train_step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import sgd
+from repro.utils.pytree import tree_add
+
+# Paper Table II defaults
+LAMBDAS = (0.4, 0.6, 0.5, 0.5)
+
+
+def _ce(logits, labels):
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], -1))
+
+
+def _kl(p_logits, q_logits):
+    """KL(softmax(p) || softmax(q))."""
+    logp = jax.nn.log_softmax(p_logits, -1)
+    logq = jax.nn.log_softmax(q_logits, -1)
+    return jnp.mean(jnp.sum(jnp.exp(logp) * (logp - logq), -1))
+
+
+def mutual_losses(local_logits, lite_logits, labels,
+                  lambdas=LAMBDAS) -> Tuple[jnp.ndarray, Dict]:
+    l1, l2, l3, l4 = lambdas
+    sg = jax.lax.stop_gradient
+    L1 = l1 * _ce(local_logits, labels) + l2 * _kl(local_logits, sg(lite_logits))
+    L2 = l3 * _ce(lite_logits, labels) + l4 * _kl(lite_logits, sg(local_logits))
+    metrics = {
+        "ce_local": _ce(local_logits, labels),
+        "ce_lite": _ce(lite_logits, labels),
+        "kl_local_lite": _kl(local_logits, lite_logits),
+        "acc_local": jnp.mean((jnp.argmax(local_logits, -1) == labels)),
+        "acc_lite": jnp.mean((jnp.argmax(lite_logits, -1) == labels)),
+    }
+    return L1 + L2, metrics
+
+
+def make_mutual_train_step(apply_local: Callable, apply_lite: Callable,
+                           lr: float = 3e-4, lambdas=LAMBDAS):
+    """jit'd one-batch mutual-KD SGD step over {local, lite} params (Eq. 35)."""
+    opt = sgd(lr, momentum=0.9)
+
+    @jax.jit
+    def step(params, opt_state, images, labels):
+        def loss_fn(p):
+            return mutual_losses(apply_local(p["local"], images),
+                                 apply_lite(p["lite"], images),
+                                 labels, lambdas)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = tree_add(params, updates)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    def init_opt(params):
+        return opt.init(params)
+
+    return step, init_opt
+
+
+def make_single_train_step(apply_fn: Callable, lr: float = 3e-4,
+                           prox_mu: float = 0.0):
+    """Plain CE step (FedAvg/pFedMe clients); prox_mu adds FedProx's term."""
+    opt = sgd(lr, momentum=0.9)
+
+    @jax.jit
+    def step(params, opt_state, images, labels, global_params):
+        def loss_fn(p):
+            loss = _ce(apply_fn(p, images), labels)
+            if prox_mu:
+                sq = jax.tree_util.tree_map(
+                    lambda a, b: jnp.sum(jnp.square(a - b)), p, global_params)
+                loss = loss + 0.5 * prox_mu * sum(jax.tree_util.tree_leaves(sq))
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return tree_add(params, updates), opt_state, {"loss": loss}
+
+    return step, opt.init

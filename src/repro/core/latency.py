@@ -1,0 +1,78 @@
+"""Client latency / performance model (paper §III.B, Eqs. 6-10).
+
+The paper simulates heterogeneous clients on one server; we do the same with
+an analytic model: per-epoch time = dataset_size * model_cost / speed, with
+a time-varying speed (slow sinusoidal drift + lognormal jitter) so the RL
+agents face a *dynamic* environment (paper §IV.B). All times are seconds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+@dataclass
+class ClientProfile:
+    client_id: int
+    base_speed: float          # effective samples*cost-units per second
+    dataset_size: int
+    drift_amp: float = 0.2     # slow sinusoidal capability drift
+    drift_period: float = 50.0
+    jitter_sigma: float = 0.05 # per-round lognormal noise
+
+    def speed_at(self, round_idx: int, rng: np.random.Generator) -> float:
+        drift = 1.0 + self.drift_amp * np.sin(
+            2 * np.pi * round_idx / self.drift_period + self.client_id)
+        jitter = rng.lognormal(0.0, self.jitter_sigma)
+        return self.base_speed * max(drift, 0.05) * jitter
+
+
+def make_heterogeneous_clients(n_clients: int, max_speed_ratio: float,
+                               dataset_sizes: Sequence[int], seed: int = 0,
+                               ) -> List[ClientProfile]:
+    """Speeds log-spaced across `max_speed_ratio` (paper: 10x/20x/50x)."""
+    rng = np.random.default_rng(seed)
+    speeds = np.geomspace(1.0, max_speed_ratio, n_clients)
+    rng.shuffle(speeds)
+    return [ClientProfile(i, float(s), int(d))
+            for i, (s, d) in enumerate(zip(speeds, dataset_sizes))]
+
+
+class LatencyModel:
+    """Computes T^d (assessment), T^l (local training) per Eqs. 7-10."""
+
+    def __init__(self, model_costs: Dict[str, float], lite_cost: float,
+                 cost_scale: float = 1e-6, seed: int = 0):
+        """model_costs: per-size-category per-sample cost (~params)."""
+        self.model_costs = dict(model_costs)
+        self.lite_cost = float(lite_cost)
+        self.cost_scale = cost_scale
+        self.rng = np.random.default_rng(seed)
+
+    def assessment_time(self, profile: ClientProfile, round_idx: int) -> float:
+        """T^d: one LiteModel epoch (paper §IV.B)."""
+        speed = profile.speed_at(round_idx, self.rng)
+        return profile.dataset_size * self.lite_cost * self.cost_scale / speed
+
+    def local_train_time(self, profile: ClientProfile, round_idx: int,
+                         size_name: str, intensity: int,
+                         include_lite: bool = True) -> float:
+        """T^l: `intensity` local iterations of (local model [+ LiteModel])
+        mutual-learning training (Eq. 9-10). Baselines without a LiteModel
+        pass include_lite=False."""
+        speed = profile.speed_at(round_idx, self.rng)
+        cost = self.model_costs[size_name] + (self.lite_cost if include_lite
+                                              else 0.0)
+        per_epoch = profile.dataset_size * cost * self.cost_scale / speed
+        return max(int(intensity), 1) * per_epoch
+
+    def relative_time_ratio(self, size_name: str) -> float:
+        """M(.) in Eq. 24: cost of category relative to the LiteModel."""
+        return (self.model_costs[size_name] + self.lite_cost) / self.lite_cost
+
+
+def straggling_latency(times: Sequence[float]) -> float:
+    """Eq. 8: max - min over participating clients."""
+    return float(max(times) - min(times))

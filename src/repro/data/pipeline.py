@@ -1,0 +1,28 @@
+"""Minimal batching pipeline: shuffled epochs, drop-remainder batches."""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+class BatchLoader:
+    def __init__(self, x: np.ndarray, y: np.ndarray, batch_size: int,
+                 seed: int = 0):
+        assert len(x) == len(y)
+        self.x, self.y = x, y
+        self.batch_size = min(batch_size, len(x))
+        self.rng = np.random.default_rng(seed)
+
+    def epoch(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        order = self.rng.permutation(len(self.x))
+        nb = len(self.x) // self.batch_size
+        for b in range(max(nb, 1)):
+            sel = order[b * self.batch_size:(b + 1) * self.batch_size]
+            if len(sel) == 0:
+                sel = order[: self.batch_size]
+            yield self.x[sel], self.y[sel]
+
+    def sample(self) -> Tuple[np.ndarray, np.ndarray]:
+        sel = self.rng.integers(0, len(self.x), size=self.batch_size)
+        return self.x[sel], self.y[sel]

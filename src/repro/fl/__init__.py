@@ -1,0 +1,3 @@
+from repro.fl.env import FLEnvironment, FLSimConfig
+from repro.fl.server import HAPFLServer, RoundRecord
+from repro.fl.baselines import BaselineRunner, BaselineRecord

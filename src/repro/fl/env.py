@@ -1,0 +1,91 @@
+"""FL simulation environment: data, clients, latency, model pools.
+
+Mirrors the paper's testbed (§V.A): K heterogeneous clients, Dirichlet(0.4)
+non-IID data, a LiteModel + {small[, medium], large} CNN pool, and an
+analytic latency model with time-varying client speeds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.latency import LatencyModel, make_heterogeneous_clients
+from repro.core.aggregation import information_entropy
+from repro.data import (BatchLoader, dirichlet_partition, label_histogram,
+                        make_image_dataset)
+from repro.models.cnn import CNNConfig, apply_cnn, cnn_pool, init_cnn
+
+
+@dataclass
+class FLSimConfig:
+    dataset: str = "mnist"
+    n_clients: int = 10          # K (paper Table II)
+    k_per_round: int = 6         # k
+    max_speed_ratio: float = 10.0
+    size_names: Tuple[str, ...] = ("small", "large")
+    default_epochs: int = 20     # E (paper Table II)
+    batch_size: int = 32
+    batches_per_epoch: int = 2   # CPU-budget knob: batches per "epoch"
+    # paper lr3=3e-4 (Adam, real data); tuned for SGD-momentum + synthetic data
+    lr: float = 5e-3
+    dirichlet_alpha: float = 0.4
+    n_train: int = 3000
+    n_test: int = 600
+    seed: int = 0
+    md: float = 10.0             # MD (paper Table II)
+
+
+class FLEnvironment:
+    def __init__(self, cfg: FLSimConfig):
+        self.cfg = cfg
+        data = make_image_dataset(cfg.dataset, cfg.n_train, cfg.n_test,
+                                  seed=1234 + cfg.seed)
+        self.data = data
+        self.n_classes = data["n_classes"]
+        parts = dirichlet_partition(data["y_train"], cfg.n_clients,
+                                    cfg.dirichlet_alpha, seed=cfg.seed)
+        self.partitions = parts
+        self.histograms = [label_histogram(data["y_train"], p, self.n_classes)
+                           for p in parts]
+        self.entropies = [information_entropy(h) for h in self.histograms]
+        self.loaders = [
+            BatchLoader(data["x_train"][p], data["y_train"][p],
+                        cfg.batch_size, seed=cfg.seed + 7 * i)
+            for i, p in enumerate(parts)]
+        # model pool
+        pool = cnn_pool(cfg.dataset)
+        self.pool: Dict[str, CNNConfig] = {s: pool[s] for s in cfg.size_names}
+        self.lite_cfg: CNNConfig = pool["lite"]
+        # latency model (cost ~ analytic parameter count)
+        self.latency = LatencyModel(
+            {s: float(c.num_params()) for s, c in self.pool.items()},
+            float(self.lite_cfg.num_params()), seed=cfg.seed)
+        self.profiles = make_heterogeneous_clients(
+            cfg.n_clients, cfg.max_speed_ratio,
+            [len(p) for p in parts], seed=cfg.seed)
+        self.rng = np.random.default_rng(cfg.seed + 99)
+
+    # ------------------------------------------------------------------ #
+    def select_clients(self) -> List[int]:
+        return sorted(self.rng.choice(self.cfg.n_clients,
+                                      size=self.cfg.k_per_round,
+                                      replace=False).tolist())
+
+    def test_accuracy(self, params, cnn_cfg: CNNConfig,
+                      max_n: int = 512) -> float:
+        x = self.data["x_test"][:max_n]
+        y = self.data["y_test"][:max_n]
+        logits = apply_cnn(params, cnn_cfg, x)
+        return float(np.mean(np.argmax(np.asarray(logits), -1) == y))
+
+    def client_test_accuracy(self, params, cnn_cfg: CNNConfig,
+                             client: int, max_n: int = 256) -> float:
+        """Accuracy on the client's own label distribution (personalized)."""
+        idx = self.partitions[client][:max_n]
+        x = self.data["x_train"][idx]
+        y = self.data["y_train"][idx]
+        logits = apply_cnn(params, cnn_cfg, x)
+        return float(np.mean(np.argmax(np.asarray(logits), -1) == y))

@@ -1,0 +1,206 @@
+"""HAPFL server — Algorithm 1 end-to-end over the CNN FL simulation.
+
+Per round: assessment training -> PPO1 model allocation -> PPO2 intensity
+assignment -> client mutual-KD local training -> entropy+accuracy weighted
+aggregation (LiteModels globally, local models per size group) -> RL rewards
+and buffered PPO updates.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.allocation import ModelAllocator
+from repro.core.aggregation import (aggregation_weights, fedavg_aggregate,
+                                    group_aggregate, weighted_aggregate)
+from repro.core.distill import make_mutual_train_step
+from repro.core.intensity import IntensityAllocator
+from repro.core.latency import straggling_latency
+from repro.fl.env import FLEnvironment
+from repro.models.cnn import apply_cnn, init_cnn
+
+
+@dataclass
+class RoundRecord:
+    round_idx: int
+    clients: List[int]
+    sizes: List[str]
+    intensities: List[int]
+    assess_times: List[float]
+    local_times: List[float]
+    straggling: float
+    wall_time: float
+    reward_ppo1: float
+    reward_ppo2: float
+    acc_lite: float
+    acc_by_size: Dict[str, float]
+    client_acc: Dict[int, Dict[str, float]]
+
+
+class HAPFLServer:
+    def __init__(self, env: FLEnvironment, seed: int = 0,
+                 use_ppo1: bool = True, use_ppo2: bool = True,
+                 weighted_agg: bool = True,
+                 lr_ppo1: float = 2e-3, lr_ppo2: float = 3e-4):
+        # paper Table II: lr1=0.02 — unstable for Adam on our tiny actor
+        # (PPO1 reward degrades); 2e-3 learns cleanly (DESIGN.md §8).
+        self.env = env
+        cfg = env.cfg
+        self.use_ppo1, self.use_ppo2 = use_ppo1, use_ppo2
+        self.weighted_agg = weighted_agg
+        self.key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(self.key, 3)
+        self.allocator = ModelAllocator(cfg.k_per_round,
+                                        list(env.pool), k1, md=cfg.md,
+                                        lr=lr_ppo1)
+        self.intensity = IntensityAllocator(
+            cfg.k_per_round, k2,
+            total_intensity=cfg.default_epochs * cfg.k_per_round, lr=lr_ppo2)
+        # global models: one lite + one per size category
+        self.lite_params = init_cnn(k3, env.lite_cfg)
+        self.global_by_size = {
+            s: init_cnn(jax.random.fold_in(k3, i), c)
+            for i, (s, c) in enumerate(env.pool.items())}
+        # jitted mutual train steps per size
+        self._steps = {}
+        for s, c in env.pool.items():
+            step, init_opt = make_mutual_train_step(
+                functools.partial(lambda p, x, cc: apply_cnn(p, cc, x), cc=c),
+                functools.partial(lambda p, x, cc: apply_cnn(p, cc, x),
+                                  cc=env.lite_cfg),
+                lr=cfg.lr)
+            self._steps[s] = (step, init_opt)
+        self.history: List[RoundRecord] = []
+        self._round = 0
+
+    # ------------------------------------------------------------------ #
+    def _client_train(self, client: int, size: str, intensity: int):
+        env = self.env
+        step, init_opt = self._steps[size]
+        params = {"local": self.global_by_size[size], "lite": self.lite_params}
+        opt_state = init_opt(params)
+        metrics = {}
+        for _ in range(intensity):
+            for _ in range(env.cfg.batches_per_epoch):
+                x, y = env.loaders[client].sample()
+                params, opt_state, metrics = step(params, opt_state, x, y)
+        acc_local = env.client_test_accuracy(params["local"], env.pool[size],
+                                             client)
+        acc_lite = env.client_test_accuracy(params["lite"], env.lite_cfg,
+                                            client)
+        return params, acc_local, acc_lite
+
+    def pretrain_rl(self, rounds: int) -> List[Dict[str, float]]:
+        """Latency-only rounds to train the PPO agents (Algorithm 1 runs
+        E episodes x R rounds; rewards depend only on the latency model, so
+        no CNN training is needed to learn the policies)."""
+        out = []
+        for _ in range(rounds):
+            rec = self.run_round(latency_only=True)
+            out.append({"reward_ppo1": rec.reward_ppo1,
+                        "reward_ppo2": rec.reward_ppo2,
+                        "straggling": rec.straggling})
+        return out
+
+    def run_round(self, latency_only: bool = False,
+                  deterministic: bool = False) -> RoundRecord:
+        env, cfg = self.env, self.env.cfg
+        r = self._round
+        clients = env.select_clients()
+        # 1. performance assessment training (one Lite epoch, simulated time)
+        assess = [env.latency.assessment_time(env.profiles[c], r)
+                  for c in clients]
+        # 2. PPO1: model allocation
+        self.key, k1, k2 = jax.random.split(self.key, 3)
+        if self.use_ppo1:
+            sizes, _ = self.allocator.allocate(k1, assess, deterministic)
+        else:
+            sizes = [list(env.pool)[0]] * len(clients)
+        # 3. PPO2: training intensities
+        norm = np.asarray(assess) / min(assess)
+        modified = [env.latency.relative_time_ratio(s) * t
+                    for s, t in zip(sizes, norm)]
+        if self.use_ppo2:
+            intensities, _ = self.intensity.assign(k2, modified, deterministic)
+        else:
+            intensities = [cfg.default_epochs] * len(clients)
+        # 4. local mutual-KD training (real) + latency (simulated)
+        local_times, client_params, accs_local, accs_lite = [], [], [], []
+        for c, s, tau in zip(clients, sizes, intensities):
+            t_l = env.latency.local_train_time(env.profiles[c], r, s, tau)
+            local_times.append(t_l)
+            if latency_only:
+                accs_local.append(0.0)
+                accs_lite.append(0.0)
+                continue
+            p, a_loc, a_lit = self._client_train(c, s, tau)
+            client_params.append(p)
+            accs_local.append(a_loc)
+            accs_lite.append(a_lit)
+        # 5. aggregation
+        entropies = [env.entropies[c] for c in clients]
+        if latency_only:
+            pass
+        elif self.weighted_agg:
+            self.lite_params = weighted_aggregate(
+                self.lite_params, [p["lite"] for p in client_params],
+                aggregation_weights(entropies, accs_lite))
+            self.global_by_size = group_aggregate(
+                self.global_by_size, [p["local"] for p in client_params],
+                sizes, entropies, accs_local)
+        else:
+            self.lite_params = fedavg_aggregate([p["lite"] for p in client_params])
+            for s in set(sizes):
+                idx = [i for i, ss in enumerate(sizes) if ss == s]
+                self.global_by_size[s] = fedavg_aggregate(
+                    [client_params[i]["local"] for i in idx])
+        # 6. RL rewards (Algorithm 1 lines 22-30)
+        rw1 = (self.allocator.feedback(local_times, intensities)
+               if self.use_ppo1 else 0.0)
+        rw2 = self.intensity.feedback(local_times) if self.use_ppo2 else 0.0
+        # 7. bookkeeping
+        wall = max(a + t for a, t in zip(assess, local_times))
+        rec = RoundRecord(
+            round_idx=r, clients=clients, sizes=sizes,
+            intensities=[int(i) for i in intensities],
+            assess_times=assess, local_times=local_times,
+            straggling=straggling_latency(local_times), wall_time=wall,
+            reward_ppo1=rw1, reward_ppo2=rw2,
+            acc_lite=(0.0 if latency_only else
+                      env.test_accuracy(self.lite_params, env.lite_cfg)),
+            acc_by_size=({s: 0.0 for s in env.pool} if latency_only else
+                         {s: env.test_accuracy(self.global_by_size[s],
+                                               env.pool[s])
+                          for s in env.pool}),
+            client_acc={c: {"local": accs_local[i], "lite": accs_lite[i],
+                            "size": sizes[i]}
+                        for i, c in enumerate(clients)},
+        )
+        self.history.append(rec)
+        self._round += 1
+        return rec
+
+    def run(self, rounds: int, verbose: bool = False) -> List[RoundRecord]:
+        for _ in range(rounds):
+            rec = self.run_round()
+            if verbose:
+                print(f"round {rec.round_idx:3d} stragg={rec.straggling:8.2f} "
+                      f"wall={rec.wall_time:8.2f} acc_lite={rec.acc_lite:.3f} "
+                      f"rw1={rec.reward_ppo1:7.2f} rw2={rec.reward_ppo2:8.2f}")
+        return self.history
+
+    # ------------------------------------------------------------------ #
+    def summary(self) -> Dict[str, float]:
+        h = self.history
+        warm = h[len(h) // 3:] or h   # skip RL warmup for latency stats
+        return {
+            "mean_straggling": float(np.mean([r.straggling for r in warm])),
+            "total_time": float(np.sum([r.wall_time for r in h])),
+            "final_acc_lite": h[-1].acc_lite,
+            **{f"final_acc_{s}": h[-1].acc_by_size[s]
+               for s in self.env.pool},
+        }

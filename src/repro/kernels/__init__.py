@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots of the HAPFL train/serve path:
+#   flash_attention — block-wise attention (prefill/train)
+#   kd_loss         — fused mutual-KD (CE + bidirectional KL) over vocab tiles
+#   rmsnorm         — row-tiled norm
+# ops.py = jit'd wrappers (interpret=True off-TPU); ref.py = pure-jnp oracles.
+from repro.kernels.ops import (flash_attention_op, kd_loss_op, rmsnorm_op,
+                               mutual_kd_loss, on_tpu)

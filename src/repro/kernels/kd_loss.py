@@ -1,0 +1,112 @@
+"""Fused mutual-KD loss Pallas TPU kernel (the paper's Eqs. 33-34 hot-spot).
+
+Computes, in ONE streaming pass over vocab tiles (online-softmax style),
+per-token: CE(x), CE(y), KL(x||y), KL(y||x) for the local-model logits x and
+LiteModel logits y. The naive implementation reads each (N, V) logits tensor
+~6 times (two softmaxes, two log-softmaxes, CE gathers); this kernel reads
+each exactly once — the op is HBM-bandwidth-bound, so that is the win.
+
+Derivation: KL(x||y) = E_px[x - y] - lse_x + lse_y, with
+E_px[x - y] = u_x / s_x where u_x = sum_v exp(x - m_x)(x - y) and
+(m_x, s_x) the running max / scaled sumexp. u, s are rescaled by
+exp(m_old - m_new) when the running max moves, exactly like flash attention.
+
+Grid: (row_blocks, vocab_blocks), vocab minor; accumulators live in VMEM
+scratch and persist across the vocab sweep; outputs written at the last
+vocab step under @pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kd_kernel(x_ref, y_ref, lab_ref, ce_x_ref, ce_y_ref, kl_xy_ref, kl_yx_ref,
+               m_x, s_x, u_x, m_y, s_y, u_y, xl, yl,
+               *, block_n, block_v, n_vblocks):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        for r in (s_x, u_x, s_y, u_y, xl, yl):
+            r[...] = jnp.zeros((block_n, 1), jnp.float32)
+        m_x[...] = jnp.full((block_n, 1), NEG, jnp.float32)
+        m_y[...] = jnp.full((block_n, 1), NEG, jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)          # (block_n, block_v)
+    y = y_ref[...].astype(jnp.float32)
+    diff = x - y
+
+    # --- online update for x ---
+    mx_new = jnp.maximum(m_x[...], jnp.max(x, -1, keepdims=True))
+    ax = jnp.exp(m_x[...] - mx_new)
+    ex = jnp.exp(x - mx_new)
+    s_x[...] = s_x[...] * ax + jnp.sum(ex, -1, keepdims=True)
+    u_x[...] = u_x[...] * ax + jnp.sum(ex * diff, -1, keepdims=True)
+    m_x[...] = mx_new
+    # --- online update for y ---
+    my_new = jnp.maximum(m_y[...], jnp.max(y, -1, keepdims=True))
+    ay = jnp.exp(m_y[...] - my_new)
+    ey = jnp.exp(y - my_new)
+    s_y[...] = s_y[...] * ay + jnp.sum(ey, -1, keepdims=True)
+    u_y[...] = u_y[...] * ay + jnp.sum(ey * (-diff), -1, keepdims=True)
+    m_y[...] = my_new
+    # --- label gather (label may fall in this tile) ---
+    cols = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_n, block_v), 1)
+    hit = cols == lab_ref[...].astype(jnp.int32)  # (block_n, 1) broadcast
+    xl[...] = xl[...] + jnp.sum(jnp.where(hit, x, 0.0), -1, keepdims=True)
+    yl[...] = yl[...] + jnp.sum(jnp.where(hit, y, 0.0), -1, keepdims=True)
+
+    @pl.when(vi == n_vblocks - 1)
+    def _final():
+        lse_x = m_x[...] + jnp.log(s_x[...])
+        lse_y = m_y[...] + jnp.log(s_y[...])
+        ce_x_ref[...] = (lse_x - xl[...]).astype(ce_x_ref.dtype)
+        ce_y_ref[...] = (lse_y - yl[...]).astype(ce_y_ref.dtype)
+        kl_xy_ref[...] = (u_x[...] / s_x[...] - lse_x + lse_y).astype(kl_xy_ref.dtype)
+        kl_yx_ref[...] = (u_y[...] / s_y[...] - lse_y + lse_x).astype(kl_yx_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_v", "interpret"))
+def kd_loss(x_logits, y_logits, labels, *, block_n: int = 256,
+            block_v: int = 512, interpret: bool = True):
+    """x_logits, y_logits: (N, V); labels: (N,) -> dict of (N,) fp32 terms.
+
+    V is padded to a multiple of block_v with NEG (masked out by exp->0).
+    """
+    N, V = x_logits.shape
+    block_n = min(block_n, N)
+    assert N % block_n == 0
+    pad_v = (-V) % block_v
+    if pad_v:
+        x_logits = jnp.pad(x_logits, ((0, 0), (0, pad_v)), constant_values=NEG)
+        y_logits = jnp.pad(y_logits, ((0, 0), (0, pad_v)), constant_values=NEG)
+    Vp = V + pad_v
+    n_vblocks = Vp // block_v
+    labels2 = labels.reshape(N, 1).astype(jnp.int32)
+
+    kern = functools.partial(_kd_kernel, block_n=block_n, block_v=block_v,
+                             n_vblocks=n_vblocks)
+    out_shape = [jax.ShapeDtypeStruct((N, 1), jnp.float32)] * 4
+    scratch = [pltpu.VMEM((block_n, 1), jnp.float32)] * 8
+    ce_x, ce_y, kl_xy, kl_yx = pl.pallas_call(
+        kern,
+        grid=(N // block_n, n_vblocks),
+        in_specs=[
+            pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((block_n, 1), lambda i, j: (i, 0))] * 4,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(x_logits, y_logits, labels2)
+    return {"ce_x": ce_x[:, 0], "ce_y": ce_y[:, 0],
+            "kl_xy": kl_xy[:, 0], "kl_yx": kl_yx[:, 0]}

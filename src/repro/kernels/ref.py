@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        sliding_window: int = 0) -> jnp.ndarray:
+    """q, k, v: (B, H, S, hd) -> (B, H, S, hd). Naive materialized attention."""
+    S = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_idx = jnp.arange(S)[:, None]
+    k_idx = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = k_idx <= q_idx
+    if sliding_window:
+        mask = mask & (k_idx > q_idx - sliding_window)
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def kd_loss_ref(x_logits, y_logits, labels):
+    """Fused mutual-KD loss terms (paper Eqs. 33-34), per row.
+
+    x_logits, y_logits: (N, V) fp; labels: (N,) int.
+    Returns dict of per-row (N,) fp32: ce_x, ce_y, kl_xy (KL(X||Y)), kl_yx.
+    """
+    x = x_logits.astype(jnp.float32)
+    y = y_logits.astype(jnp.float32)
+    lse_x = jax.nn.logsumexp(x, axis=-1)
+    lse_y = jax.nn.logsumexp(y, axis=-1)
+    xl = jnp.take_along_axis(x, labels[:, None], axis=-1)[:, 0]
+    yl = jnp.take_along_axis(y, labels[:, None], axis=-1)[:, 0]
+    ce_x = lse_x - xl
+    ce_y = lse_y - yl
+    p_x = jax.nn.softmax(x, axis=-1)
+    p_y = jax.nn.softmax(y, axis=-1)
+    kl_xy = jnp.sum(p_x * (jax.nn.log_softmax(x, -1) - jax.nn.log_softmax(y, -1)), -1)
+    kl_yx = jnp.sum(p_y * (jax.nn.log_softmax(y, -1) - jax.nn.log_softmax(x, -1)), -1)
+    return {"ce_x": ce_x, "ce_y": ce_y, "kl_xy": kl_xy, "kl_yx": kl_yx}
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,32 @@
+"""Row-tiled RMSNorm Pallas kernel (one HBM read + write per element)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+    o_ref[...] = (x * r * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "eps", "interpret"))
+def rmsnorm(x, scale, *, block_n: int = 256, eps: float = 1e-5,
+            interpret: bool = True):
+    """x: (N, d); scale: (d,)."""
+    N, d = x.shape
+    block_n = min(block_n, N)
+    assert N % block_n == 0
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(N // block_n,),
+        in_specs=[pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+                  pl.BlockSpec((1, d), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, d), x.dtype),
+        interpret=interpret,
+    )(x, scale.reshape(1, d))

@@ -1,0 +1,79 @@
+"""Logical-axis sharding annotations.
+
+Models annotate activations with logical axis names via ``shard(x, ...)``.
+Outside a mesh context this is a no-op (CPU smoke tests); inside
+``use_axis_rules(mesh, rules)`` it becomes ``with_sharding_constraint``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "rules": None}
+
+# Default logical-axis -> mesh-axis rules. A logical axis may map to a tuple
+# of mesh axes (e.g. batch over (pod, data)).
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qdim": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "cap": (),
+    "inner": ("model",),
+    "state": (),
+    "cache_seq": ("data",),   # long-context decode: shard KV length
+    "fsdp": ("data",),        # parameter FSDP axis
+}
+
+
+@contextlib.contextmanager
+def use_axis_rules(mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    prev = dict(_STATE)
+    _STATE["mesh"] = mesh
+    _STATE["rules"] = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE["mesh"]
+
+
+def logical_to_pspec(names: Tuple[Optional[str], ...], mesh: Mesh,
+                     rules: Dict[str, Tuple[str, ...]], shape=None) -> P:
+    axes = []
+    used = set()
+    for i, n in enumerate(names):
+        if n is None:
+            axes.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules.get(n, ()) if a in mesh.axis_names and a not in used)
+        if shape is not None and mesh_axes:
+            # don't shard if the dim is smaller than the axis product
+            total = 1
+            for a in mesh_axes:
+                total *= mesh.shape[a]
+            if shape[i] % total != 0 and shape[i] < total:
+                mesh_axes = ()
+        used.update(mesh_axes)
+        axes.append(mesh_axes if mesh_axes else None)
+    return P(*axes)
+
+
+def shard(x, *names):
+    """Annotate array ``x`` whose dims carry logical axis ``names``."""
+    mesh, rules = _STATE["mesh"], _STATE["rules"]
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(names, mesh, rules, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

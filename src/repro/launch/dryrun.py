@@ -1,0 +1,307 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) combination
+on the production mesh, record memory/cost/collective analysis.
+
+MUST be the very first lines — jax locks the device count on first init:
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.axes import use_axis_rules
+from repro.launch.hlo_analysis import collective_stats, count_op
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   opt_shardings, params_shardings)
+from repro.launch.specs import input_specs
+from repro.models.api import decode_step as _decode_fn
+from repro.models.api import prefill as _prefill_fn
+from repro.train.step import TrainStepConfig, make_hapfl_train_step
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _state_shardings(state_specs, mesh):
+    p_sh = params_shardings(state_specs["params"], mesh)
+    o_sh = opt_shardings(state_specs["opt"], p_sh, mesh)
+    return {"params": p_sh, "opt": o_sh}
+
+
+def build_lowerable(cfg, shape_name: str, mesh, *,
+                    tcfg: TrainStepConfig = TrainStepConfig(),
+                    cfg_lite=None):
+    """Returns (fn, args, in_shardings, out_shardings)."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg_lite = cfg_lite or cfg.lite()
+    specs = input_specs(cfg, shape, cfg_lite, tcfg)
+
+    if shape.mode == "train":
+        step = make_hapfl_train_step(cfg, cfg_lite, tcfg)
+
+        def fn(state, batch):
+            return step(state, batch)
+        st_sh = _state_shardings(specs["state"], mesh)
+        b_sh = batch_shardings(specs["batch"], mesh, shape.global_batch)
+        args = (specs["state"], specs["batch"])
+        in_sh = (st_sh, b_sh)
+        out_sh = (st_sh, None)
+    elif shape.mode == "prefill":
+        def fn(params, batch):
+            return _prefill_fn(params, cfg, batch)
+        p_sh = params_shardings(specs["params"], mesh)
+        b_sh = batch_shardings(specs["batch"], mesh, shape.global_batch)
+        args = (specs["params"], specs["batch"])
+        in_sh = (p_sh, b_sh)
+        out_sh = None
+    else:  # decode
+        def fn(params, batch, cache, cache_index):
+            return _decode_fn(params, cfg, batch, cache, cache_index)
+        p_sh = params_shardings(specs["params"], mesh)
+        b_sh = batch_shardings(specs["batch"], mesh, shape.global_batch)
+        c_sh = cache_shardings(specs["cache"], mesh, shape.global_batch)
+        args = (specs["params"], specs["batch"], specs["cache"],
+                specs["cache_index"])
+        in_sh = (p_sh, b_sh, c_sh, NamedSharding(mesh, P()))
+        out_sh = (None, c_sh)
+    return fn, args, in_sh, out_sh
+
+
+def _compile(cfg, shape_name, mesh, tcfg, cfg_lite=None, donate=False):
+    fn, args, in_sh, out_sh = build_lowerable(cfg, shape_name, mesh,
+                                              tcfg=tcfg, cfg_lite=cfg_lite)
+    mode = INPUT_SHAPES[shape_name].mode
+    donate_argnums = ()
+    if donate:
+        # train: donate the train state; decode: donate the KV/SSM cache.
+        donate_argnums = (0,) if mode == "train" else \
+            ((2,) if mode == "decode" else ())
+    with mesh:
+        with use_axis_rules(mesh):
+            t0 = time.time()
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate_argnums)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _raw_cost(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    cost = dict(cost or {})
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(sum(v["bytes"] for v in coll.values())),
+        "collectives": coll,
+        "hlo": hlo,
+    }
+
+
+def _unit_layout(cfg):
+    """(unit_layers, n_units, tail_layers) for scan-correction extrapolation."""
+    if cfg.block_kind == "xlstm" and cfg.slstm_every:
+        u = cfg.slstm_every
+    elif cfg.shared_attn_every:
+        u = cfg.shared_attn_every
+    else:
+        u = 1
+    return u, cfg.n_layers // u, cfg.n_layers % u
+
+
+def scan_corrected_cost(cfg, shape_name, mesh, tcfg, cfg_lite):
+    """XLA cost analysis counts while-loop (lax.scan) bodies ONCE. Compile
+    1-unit and 2-unit *unrolled* variants; delta = per-unit cost; extrapolate
+    to the full depth. Exact for tail-free stacks; the zamba2 tail (3 mamba
+    layers of a 6-layer unit) is approximated at tail/unit of a unit."""
+    u, n_units, tail = _unit_layout(cfg)
+    small = lambda k: dataclasses.replace(
+        cfg, name=f"{cfg.name}-probe{k}", n_layers=u * k, scan_layers=False)
+    c1, _, _ = _compile(small(1), shape_name, mesh, tcfg, cfg_lite)
+    c2, _, _ = _compile(small(2), shape_name, mesh, tcfg, cfg_lite)
+    r1, r2 = _raw_cost(c1), _raw_cost(c2)
+    scale = (n_units - 1) + tail / u
+    out = {}
+    mb = max(tcfg.microbatch, 1)
+    for k in ("flops", "bytes", "coll_bytes"):
+        delta = max(r2[k] - r1[k], 0.0)
+        # microbatch grad-accum is also a lax.scan counted once -> x mb
+        # (the optimizer update is then overcounted mb-1 times; negligible)
+        out[k] = (r1[k] + scale * delta) * mb
+        out[f"{k}_per_unit"] = delta * mb
+    return out
+
+
+def analyze(compiled, meta, n_chips: int, corrected):
+    raw = _raw_cost(compiled)
+    flops = corrected["flops"]
+    byts = corrected["bytes"]
+    coll_bytes = corrected["coll_bytes"]
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_d[k] = getattr(mem, k, None)
+    # roofline terms (per chip; cost_analysis is on the SPMD per-device module)
+    compute_t = flops / HW["peak_flops_bf16"]
+    memory_t = byts / HW["hbm_bw"]
+    coll_t = coll_bytes / HW["ici_bw"]
+    tokens = meta["tokens"]
+    n_active = meta["params_local_active"] + meta["params_lite"]
+    mult = 6 if meta["mode"] == "train" else 2
+    if meta["mode"] != "train":
+        n_active = meta["params_local_active"]
+    model_flops = mult * n_active * tokens
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+    return {
+        **meta,
+        "n_chips": n_chips,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": byts,
+        "collective_bytes_per_chip": coll_bytes,
+        "raw_scan_flops_per_chip": raw["flops"],
+        "flops_per_unit": corrected.get("flops_per_unit"),
+        "collectives": raw["collectives"],
+        "memory": mem_d,
+        **terms,
+        "dominant": dominant,
+        "model_flops_total": model_flops,
+        "useful_flops_ratio": (model_flops / (flops * n_chips)
+                               if flops else None),
+        "n_remat_dots": count_op(raw["hlo"], "dot"),
+    }
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            tcfg: TrainStepConfig = TrainStepConfig(),
+            swa_fallback: bool = True, verbose: bool = True,
+            probes: bool = True, donate: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    variant = "faithful"
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        if not swa_fallback:
+            return {"arch": arch, "shape": shape_name, "skipped": True,
+                    "reason": "full-attention arch; long_500k requires "
+                              "sub-quadratic attention (see DESIGN.md)"}
+        cfg = cfg.long_ctx_variant()
+        variant = "swa"
+    cfg_lite = cfg.lite()
+    meta = {"arch": arch, "shape": shape_name, "variant": variant,
+            "params_local": cfg.num_params(),
+            "params_local_active": cfg.active_params(),
+            "params_lite": cfg_lite.num_params(),
+            "mode": shape.mode,
+            "tokens": shape.global_batch * (shape.seq_len
+                                            if shape.mode != "decode" else 1),
+            "microbatch": tcfg.microbatch, "donate": donate}
+    meta["mesh"] = "x".join(map(str, mesh.devices.shape)) + \
+        ("(pod,data,model)" if multi_pod else "(data,model)")
+    compiled, t_lower, t_compile = _compile(cfg, shape_name, mesh, tcfg,
+                                            cfg_lite, donate=donate)
+    if probes:
+        corrected = scan_corrected_cost(cfg, shape_name, mesh, tcfg, cfg_lite)
+    else:  # multi-pod pass proves lowering; roofline comes from single-pod
+        r = _raw_cost(compiled)
+        corrected = {k: r[k] for k in ("flops", "bytes", "coll_bytes")}
+    result = analyze(compiled, meta, n_chips, corrected)
+    result["lower_s"] = round(t_lower, 2)
+    result["compile_s"] = round(t_compile, 2)
+    if verbose:
+        mem = result["memory"]
+        print(f"[{arch} x {shape_name} x {meta['mesh']}] "
+              f"variant={meta['variant']} "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops/chip={result['hlo_flops_per_chip']:.3e} "
+              f"bytes/chip={result['hlo_bytes_per_chip']:.3e}")
+        print(f"  collectives: {result['collectives']}")
+        print(f"  roofline: compute={result['compute_s']:.4f}s "
+              f"memory={result['memory_s']:.4f}s "
+              f"collective={result['collective_s']:.4f}s "
+              f"dominant={result['dominant']}")
+    return result
+
+
+def artifact_path(arch, shape_name, multi_pod, tag=""):
+    mesh_tag = "multipod" if multi_pod else "singlepod"
+    safe = arch.replace("/", "_").replace(".", "_")
+    suffix = f"-{tag}" if tag else ""
+    return ARTIFACT_DIR / f"{safe}--{shape_name}--{mesh_tag}{suffix}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    choices=["all"] + list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-swa-fallback", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute cached")
+    ap.add_argument("--tag", default="", help="artifact suffix (perf exps)")
+    ap.add_argument("--microbatch", type=int, default=4,
+                    help="grad-accum microbatches for train_4k (0 = off)")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate train state / decode cache buffers")
+    ap.add_argument("--loss-chunk", type=int, default=0,
+                    help="sequence-chunked KD loss (memory-term lever)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    tcfg = TrainStepConfig(microbatch=args.microbatch,
+                           loss_chunk=args.loss_chunk)
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                path = artifact_path(arch, shape_name, mp, args.tag)
+                if path.exists() and not args.force:
+                    print(f"cached: {path.name}")
+                    continue
+                try:
+                    res = run_one(arch, shape_name, multi_pod=mp, tcfg=tcfg,
+                                  swa_fallback=not args.no_swa_fallback,
+                                  probes=not mp, donate=args.donate)
+                    path.write_text(json.dumps(res, indent=1, default=str))
+                except Exception as e:  # noqa
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, mp, str(e)[:200]))
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Parse collective ops + operand bytes out of lowered/compiled HLO text.
+
+cost_analysis() reports FLOPs and HBM bytes but NOT collective traffic, so
+the roofline's collective term comes from summing operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+in the (optimized, SPMD-partitioned) HLO module.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g. "f32[16,128]{1,0}" or "bf16[2,16,4096]"
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# op line: "%name = <shape or tuple> opcode(...)"
+_OP_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:[a-z0-9_]+\[[0-9,]*\][^ ]*))\s+"
+    r"([a-z0-9\-]+)(?:\.[0-9]+)?\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """-> {op_kind: {count, bytes}} summing OUTPUT shape bytes per op.
+
+    (For all-gather the output is the gathered tensor; for all-reduce the
+    reduced tensor; both are the right per-device traffic proxies up to the
+    (n-1)/n ring factor, which we fold into the roofline constant.)
+    """
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, opcode = m.group(1), m.group(2)
+        # strip "-start"/"-done" async split (count once, at -start)
+        base = opcode
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in COLLECTIVES:
+            continue
+        if opcode.endswith("-done"):
+            continue
+        b = shape_bytes(shape_str)
+        stats[base]["count"] += 1
+        stats[base]["bytes"] += b
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in collective_stats(hlo_text).values()))
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opcode)}(?:\.[0-9]+)?\(", hlo_text))

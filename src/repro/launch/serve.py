@@ -1,0 +1,41 @@
+"""Serving driver: batched greedy decode of any assigned arch (smoke scale on
+CPU; full configs lower under the production mesh via repro.launch.dryrun).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --batch 2 \
+      --prompt-len 32 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models.api import dummy_batch, init_model
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params,
+                         max_len=args.prompt_len + args.new_tokens)
+    batch = dummy_batch(cfg, args.batch, args.prompt_len, with_labels=False)
+    t0 = time.time()
+    toks = engine.generate(batch, n_new=args.new_tokens)
+    dt = time.time() - t0
+    print(f"generated {toks.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
+    print(toks[0][:8], "...")
+
+
+if __name__ == "__main__":
+    main()

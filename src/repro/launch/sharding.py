@@ -1,0 +1,180 @@
+"""Parameter / batch / cache sharding rules (FSDP x TP), name-based.
+
+Convention: "column-parallel" weights (input proj, up-proj, q/k/v) shard
+their output dim on `model` and input dim on `data` (FSDP); "row-parallel"
+weights (down/out proj) the reverse; embeddings shard vocab on `model`.
+A dim is only sharded when divisible by the mesh-axis size — GSPMD could
+pad uneven shards, but padded params waste HBM, so we skip instead.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# last dim -> model, second-to-last -> data (fsdp)
+COL_PARALLEL = {"wq", "wk", "wv", "w_up", "w_gate", "in_proj", "w_v", "w_z",
+                "w_q", "w_k", "w_in", "head", "fc1"}
+# last dim -> data (fsdp), second-to-last -> model
+ROW_PARALLEL = {"wo", "w_down", "out_proj", "fc2"}
+EMBED = {"embed"}
+REPLICATED = {"scale", "bias", "a_log", "dt_bias", "d_skip", "conv_w",
+              "conv_b", "b_gates", "r", "b", "router", "log_std",
+              "conv", "fc1_b", "fc2_b"}
+
+
+def _key_name(entry) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return str(entry.idx)
+    return str(entry)
+
+
+def _fits(dim: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and dim % mesh.shape[axis] == 0
+
+
+def param_pspec(path: Tuple, leaf, mesh: Mesh) -> P:
+    names = [_key_name(p) for p in path]
+    name = names[-1]
+    shape = leaf.shape
+    nd = len(shape)
+    spec = [None] * nd
+    is_moe = any(n == "moe" for n in names)
+
+    def assign(i, axis):
+        if 0 <= i < nd and spec[i] is None and _fits(shape[i], mesh, axis):
+            spec[i] = axis
+
+    if name in REPLICATED or nd <= 1:
+        return P(*spec)
+    if is_moe and name in ("w_up", "w_gate", "w_down") and nd >= 3:
+        # (L, E, d, ff) / (L, E, ff, d): expert-parallel on model if divisible,
+        # else tensor-parallel inside the expert on the ff dim.
+        e_dim = nd - 3
+        if _fits(shape[e_dim], mesh, "model"):
+            assign(e_dim, "model")
+            assign(nd - 2, "data")
+        else:
+            # w_up/w_gate: (.., d, ff) -> ff is last; w_down: (.., ff, d)
+            ff_dim = nd - 2 if name == "w_down" else nd - 1
+            assign(ff_dim, "model")
+            assign(nd - 1 if ff_dim != nd - 1 else nd - 2, "data")
+        return P(*spec)
+    if name in EMBED:
+        # (V, d) or (nq, V, d): vocab -> model, d -> data
+        assign(nd - 2, "model")
+        assign(nd - 1, "data")
+        return P(*spec)
+    if name in COL_PARALLEL:
+        assign(nd - 1, "model")
+        assign(nd - 2, "data")
+        return P(*spec)
+    if name in ROW_PARALLEL:
+        assign(nd - 2, "model")
+        assign(nd - 1, "data")
+        return P(*spec)
+    return P(*spec)
+
+
+def params_shardings(params_shape, mesh: Mesh):
+    """ShapeDtypeStruct pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh)),
+        params_shape)
+
+
+def opt_shardings(opt_shape, params_shardings_tree, mesh: Mesh):
+    """Adam m/v mirror the param shardings; step scalar replicated."""
+    rep = NamedSharding(mesh, P())
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return rep
+        return NamedSharding(mesh, param_pspec(path[1:], leaf, mesh))
+    return jax.tree_util.tree_map_with_path(one, opt_shape)
+
+
+# --------------------------------------------------------------------- #
+def batch_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    """Largest prefix of (pod, data) that divides the global batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    chosen = []
+    prod = 1
+    for a in axes:
+        if batch % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    return tuple(chosen)
+
+
+def batch_shardings(batch_shape: Dict[str, Any], mesh: Mesh, batch: int):
+    ba = batch_axes(mesh, batch)
+    spec_b = tuple(ba) if ba else None
+
+    def one(path, leaf):
+        name = _key_name(path[-1])
+        if name == "positions" and leaf.ndim == 3:       # (3, B, S)
+            return NamedSharding(mesh, P(None, spec_b))
+        dims = [spec_b] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*dims))
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, batch: int):
+    """Decode caches: shard batch if divisible; KV heads / cache length on
+    model / data when the batch axis is idle (long-context, batch=1)."""
+    ba = batch_axes(mesh, batch)
+    spec_b = tuple(ba) if ba else None
+
+    def one(path, leaf):
+        name = _key_name(path[-1])
+        shape = leaf.shape
+        nd = leaf.ndim
+        spec = [None] * nd
+        if name in ("k", "v") and nd >= 4:
+            # (..., B, L, KV, hd)
+            b_dim, l_dim, kv_dim, hd_dim = nd - 4, nd - 3, nd - 2, nd - 1
+            if spec_b:
+                spec[b_dim] = spec_b
+            elif _fits(shape[l_dim], mesh, "data"):
+                spec[l_dim] = "data"     # flash-decode style length sharding
+            if _fits(shape[kv_dim], mesh, "model"):
+                spec[kv_dim] = "model"
+            elif spec[l_dim] is None and _fits(shape[l_dim], mesh, "model"):
+                # kv_heads not divisible (MQA/GQA<16): shard cache LENGTH on
+                # model (flash-decode style — only softmax partials cross
+                # shards). hd-sharding was tried first and refuted: it
+                # all-reduces full (B,H,1,S) score rows (§Perf iteration B).
+                spec[l_dim] = "model"
+            elif _fits(shape[hd_dim], mesh, "model"):
+                spec[hd_dim] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if name == "ssm" and nd >= 4:
+            # (..., B, H, n, P)
+            b_dim, h_dim = nd - 4, nd - 3
+            if spec_b:
+                spec[b_dim] = spec_b
+            if _fits(shape[h_dim], mesh, "model"):
+                spec[h_dim] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if name in ("C",) and nd >= 4:   # mlstm (..., B, H, Pk, P)
+            b_dim = nd - 4
+            if spec_b:
+                spec[b_dim] = spec_b
+            if _fits(shape[nd - 1], mesh, "model"):
+                spec[nd - 1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        # conv states, n/m/h/c vectors: shard batch when possible
+        if spec_b:
+            for i, s in enumerate(shape):
+                if s == batch:
+                    spec[i] = spec_b
+                    break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

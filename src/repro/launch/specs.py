@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run combo.
+
+No device allocation — the shannon/kernels pattern: weak-type-correct,
+shardable shape structs for params, optimizer state, batches and caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models.api import init_model, make_decode_cache
+from repro.optim import adamw
+from repro.train.step import TrainStepConfig, make_train_state
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                with_labels: bool = True) -> Dict[str, jax.ShapeDtypeStruct]:
+    sds = jax.ShapeDtypeStruct
+    out: Dict[str, Any] = {}
+    if cfg.input_mode == "embeddings":
+        out["embeddings"] = sds((batch, seq, cfg.d_model), cfg.dtype)
+        out["positions"] = sds((3, batch, seq), jnp.int32)
+    elif cfg.n_codebooks:
+        out["tokens"] = sds((batch, seq, cfg.n_codebooks), jnp.int32)
+    else:
+        out["tokens"] = sds((batch, seq), jnp.int32)
+    if with_labels:
+        shape = (batch, seq, cfg.n_codebooks) if cfg.n_codebooks else (batch, seq)
+        out["labels"] = sds(shape, jnp.int32)
+    return out
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_model, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def train_state_specs(cfg_local: ModelConfig, cfg_lite: ModelConfig,
+                      tcfg: TrainStepConfig = TrainStepConfig()):
+    return jax.eval_shape(
+        lambda k: make_train_state(k, cfg_local, cfg_lite, tcfg),
+        jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return make_decode_cache(cfg, batch, max_len, shapes_only=True)
+
+
+def input_specs(cfg_local: ModelConfig, shape: ShapeConfig,
+                cfg_lite: ModelConfig = None,
+                tcfg: TrainStepConfig = TrainStepConfig()):
+    """Everything the lowered step consumes, as ShapeDtypeStructs.
+
+    train  -> {state, batch}
+    prefill-> {params, batch}
+    decode -> {params, batch(1 token), cache, cache_index}
+    """
+    if shape.mode == "train":
+        cfg_lite = cfg_lite or cfg_local.lite()
+        return {
+            "state": train_state_specs(cfg_local, cfg_lite, tcfg),
+            "batch": batch_specs(cfg_local, shape.global_batch, shape.seq_len),
+        }
+    if shape.mode == "prefill":
+        return {
+            "params": params_specs(cfg_local),
+            "batch": batch_specs(cfg_local, shape.global_batch, shape.seq_len,
+                                 with_labels=False),
+        }
+    # decode
+    return {
+        "params": params_specs(cfg_local),
+        "batch": batch_specs(cfg_local, shape.global_batch, 1,
+                             with_labels=False),
+        "cache": cache_specs(cfg_local, shape.global_batch, shape.seq_len),
+        "cache_index": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,3 @@
+from repro.models.api import (init_model, forward, prefill, decode_step,
+                              make_decode_cache, dummy_batch)
+from repro.models.cnn import CNNConfig, cnn_pool, init_cnn, apply_cnn

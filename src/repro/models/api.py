@@ -1,0 +1,62 @@
+"""Public model API: build/apply any assigned architecture by config."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (apply_model, init_cache, init_params)
+
+
+def init_model(key, cfg: ModelConfig):
+    return init_params(key, cfg)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Training forward: logits (fp32), aux losses."""
+    logits, _, aux = apply_model(params, cfg, batch, cache=None)
+    return logits, aux
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Prefill: consume a prompt, return (last-token logits, cache)."""
+    logits, cache, _ = apply_model(params, cfg, batch, cache="init")
+    return logits[:, -1:], cache
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                cache, cache_index):
+    """One decode step. batch holds the single new token (B, 1[, nq])."""
+    logits, new_cache, _ = apply_model(params, cfg, batch, cache=cache,
+                                       cache_index=cache_index)
+    return logits, new_cache
+
+
+def make_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      shapes_only: bool = False):
+    return init_cache(cfg, batch, max_len, shapes_only=shapes_only)
+
+
+def dummy_batch(cfg: ModelConfig, batch: int, seq: int, key=None,
+                with_labels: bool = True) -> Dict[str, jnp.ndarray]:
+    """A concrete batch of the right structure (for smoke tests/examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    out: Dict[str, Any] = {}
+    if cfg.input_mode == "embeddings":
+        out["embeddings"] = jax.random.normal(k1, (batch, seq, cfg.d_model),
+                                              jnp.float32).astype(cfg.dtype)
+        t = jnp.arange(seq, dtype=jnp.int32)[None].repeat(batch, 0)
+        out["positions"] = jnp.stack([t, t // 8, t % 8])  # (3, B, S) M-RoPE
+    elif cfg.n_codebooks:
+        out["tokens"] = jax.random.randint(
+            k1, (batch, seq, cfg.n_codebooks), 0, cfg.vocab_size, jnp.int32)
+    else:
+        out["tokens"] = jax.random.randint(k1, (batch, seq), 0,
+                                           cfg.vocab_size, jnp.int32)
+    if with_labels:
+        shape = (batch, seq, cfg.n_codebooks) if cfg.n_codebooks else (batch, seq)
+        out["labels"] = jax.random.randint(k2, shape, 0, cfg.vocab_size, jnp.int32)
+    return out

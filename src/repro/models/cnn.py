@@ -1,0 +1,83 @@
+"""CNN model pool for the paper-faithful HAPFL experiments (§V).
+
+The paper uses CNNs "tailored to different datasets" in three sizes:
+LiteModel, small, large. Functional JAX (lax.conv), NHWC.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    in_shape: Tuple[int, int, int]          # (H, W, C)
+    channels: Tuple[int, ...]               # conv channels per stage (stride-2 pool each)
+    hidden: int
+    n_classes: int = 10
+
+    def num_params(self) -> int:
+        c_in = self.in_shape[2]
+        total = 0
+        for c in self.channels:
+            total += 3 * 3 * c_in * c + c
+            c_in = c
+        h = self.in_shape[0] // (2 ** len(self.channels))
+        w = self.in_shape[1] // (2 ** len(self.channels))
+        flat = max(h, 1) * max(w, 1) * c_in
+        total += flat * self.hidden + self.hidden
+        total += self.hidden * self.n_classes + self.n_classes
+        return total
+
+
+def cnn_pool(dataset: str) -> Dict[str, CNNConfig]:
+    """The paper's {LiteModel, small, large} pool per dataset."""
+    shapes = {"mnist": (28, 28, 1), "cifar10": (32, 32, 3), "imagenet10": (64, 64, 3)}
+    s = shapes[dataset]
+    return {
+        "lite": CNNConfig(f"{dataset}-lite", s, (8,), 32),
+        "small": CNNConfig(f"{dataset}-small", s, (16, 32), 64),
+        "medium": CNNConfig(f"{dataset}-medium", s, (24, 48), 96),
+        "large": CNNConfig(f"{dataset}-large", s, (32, 64, 128), 128),
+    }
+
+
+def init_cnn(key, cfg: CNNConfig):
+    params = {"conv": [], "conv_b": []}
+    c_in = cfg.in_shape[2]
+    keys = jax.random.split(key, len(cfg.channels) + 2)
+    for i, c in enumerate(cfg.channels):
+        w = jax.random.normal(keys[i], (3, 3, c_in, c)) * math.sqrt(2.0 / (9 * c_in))
+        params["conv"].append(w.astype(jnp.float32))
+        params["conv_b"].append(jnp.zeros((c,), jnp.float32))
+        c_in = c
+    h = cfg.in_shape[0] // (2 ** len(cfg.channels))
+    w_ = cfg.in_shape[1] // (2 ** len(cfg.channels))
+    flat = max(h, 1) * max(w_, 1) * c_in
+    params["fc1"] = (jax.random.normal(keys[-2], (flat, cfg.hidden))
+                     * math.sqrt(2.0 / flat)).astype(jnp.float32)
+    params["fc1_b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+    params["fc2"] = (jax.random.normal(keys[-1], (cfg.hidden, cfg.n_classes))
+                     * math.sqrt(1.0 / cfg.hidden)).astype(jnp.float32)
+    params["fc2_b"] = jnp.zeros((cfg.n_classes,), jnp.float32)
+    return params
+
+
+def apply_cnn(params, cfg: CNNConfig, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, H, W, C) -> logits (B, n_classes)."""
+    x = images.astype(jnp.float32)
+    for w, b in zip(params["conv"], params["conv_b"]):
+        x = jax.lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + b)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"] + params["fc1_b"])
+    return x @ params["fc2"] + params["fc2_b"]

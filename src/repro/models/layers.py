@@ -1,0 +1,103 @@
+"""Core layers: norms, embeddings, RoPE / M-RoPE, MLPs. Pure functional JAX."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.axes import shard
+
+
+# --------------------------------------------------------------------- #
+# initializers
+# --------------------------------------------------------------------- #
+def dense_init(key, fan_in: int, fan_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, (fan_in, fan_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+def init_norm(key, d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparam_ln":  # olmo: no learnable affine
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# rotary embeddings (standard + M-RoPE)
+# --------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: Tuple[int, ...] = ()) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) or (3, B, S) for M-RoPE."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    if mrope_sections:
+        # positions: (3, B, S); each rotary-dim section uses its own stream
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        sec_ids = jnp.concatenate([
+            jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(mrope_sections)
+        ])  # (hd/2,)
+        pos = positions.astype(jnp.float32)                 # (3, B, S)
+        angles = pos[..., None] * inv[None, None, None, :]  # (3, B, S, hd/2)
+        angles = jnp.moveaxis(angles, 0, -1)                # (B, S, hd/2, 3)
+        angles = jnp.take_along_axis(
+            angles, jnp.broadcast_to(sec_ids[None, None, :, None],
+                                     angles.shape[:-1] + (1,)), axis=-1)[..., 0]
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        angles = positions.astype(jnp.float32)[..., None] * inv  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------- #
+def init_mlp(key, d: int, ff: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, d, ff, dtype), "w_down": dense_init(k2, ff, d, dtype)}
+    if act == "silu":  # swiglu
+        p["w_gate"] = dense_init(k3, d, ff, dtype)
+    return p
+
+
+def apply_mlp(params, x, act: str):
+    h = x @ params["w_up"]
+    if act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", "seq", "ff")
+    return h @ params["w_down"]

@@ -1,0 +1,318 @@
+"""SSM / recurrent blocks: Mamba2 (SSD), mLSTM and sLSTM (xLSTM).
+
+TPU adaptation: GPU reference implementations use custom CUDA scans; here the
+sequence dimension is processed in MXU-friendly *chunkwise-parallel* form —
+quadratic attention-like einsums inside a chunk, a `lax.scan` carrying the
+recurrent state across chunks. sLSTM is inherently sequential (recurrent
+weights R) and stays a `lax.scan` over time, as noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.axes import shard
+from repro.models.layers import dense_init
+
+MAMBA_HEAD_DIM = 64
+CHUNK = 128
+
+
+# ===================================================================== #
+# Mamba2 (SSD)
+# ===================================================================== #
+def mamba2_dims(cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    inner = 2 * d
+    P = min(MAMBA_HEAD_DIM, inner)
+    H = inner // P
+    n = cfg.ssm_state or 64
+    return d, inner, H, P, n
+
+
+def init_mamba2(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d, inner, H, P, n = mamba2_dims(cfg, d_model)
+    conv_dim = inner + 2 * n
+    ks = jax.random.split(key, 5)
+    dt = jnp.exp(jax.random.uniform(ks[3], (H,)) * (math.log(0.1) - math.log(0.001))
+                 + math.log(0.001))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * inner + 2 * n + H, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)) * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_proj": dense_init(ks[4], inner, d, cfg.dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, L, C), w: (w, C). state: (B, w-1, C)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W)) + b
+    new_state = xp[:, -(W - 1):, :] if W > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunk_scan(xh, Bm, Cm, dt, A):
+    """Chunkwise SSD. xh: (B,L,H,P); Bm,Cm: (B,L,n); dt: (B,L,H); A: (H,) (<0).
+
+    Returns y: (B,L,H,P) and final state (B,H,n,P).
+    """
+    Bsz, L, H, P = xh.shape
+    n = Bm.shape[-1]
+    Lc = min(CHUNK, L)
+    assert L % Lc == 0
+    nc = L // Lc
+    r = lambda t: t.reshape((Bsz, nc, Lc) + t.shape[2:]).swapaxes(0, 1)
+    xc, Bc, Cc, dtc = r(xh), r(Bm), r(Cm), r(dt)
+
+    def body(h, inp):
+        xk, Bk, Ck, dtk = inp                      # (B,Lc,...)
+        a = dtk * A                                # (B,Lc,H) negative
+        cum = jnp.cumsum(a, axis=1)                # (B,Lc,H)
+        cum_end = cum[:, -1]                       # (B,H)
+        # inter-chunk: y_t += exp(cum_t) * C_t . h_prev
+        y_inter = jnp.einsum("bln,bhnp,blh->blhp", Ck, h, jnp.exp(cum))
+        # intra-chunk
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Lc,Lc,H) t,s
+        causal = jnp.tril(jnp.ones((Lc, Lc), bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bln,bsn->bls", Ck, Bk)                # (B,Lc,Lc)
+        xdt = xk * dtk[..., None]                              # (B,Lc,H,P)
+        y_intra = jnp.einsum("bls,blsh,bshp->blhp", cb, decay, xdt)
+        # state update
+        w_state = jnp.exp(cum_end[:, None, :] - cum)           # (B,Lc,H)
+        s_chunk = jnp.einsum("bsn,bshp,bsh->bhnp", Bk, xdt, w_state)
+        h_new = jnp.exp(cum_end)[:, :, None, None] * h + s_chunk
+        return h_new, y_inter + y_intra
+
+    h0 = jnp.zeros((Bsz, H, n, P), jnp.float32)
+    hT, yc = jax.lax.scan(body, h0, (xc.astype(jnp.float32), Bc.astype(jnp.float32),
+                                     Cc.astype(jnp.float32), dtc))
+    y = yc.swapaxes(0, 1).reshape(Bsz, L, H, P)
+    return y, hT
+
+
+def apply_mamba2(params, cfg: ModelConfig, x, cache: Optional[Dict] = None,
+                 d_model: Optional[int] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, L, d). cache (decode): {"conv": (B,w-1,conv_dim), "ssm": (B,H,n,P)}."""
+    d, inner, H, P, n = mamba2_dims(cfg, d_model)
+    B, L, _ = x.shape
+    proj = x @ params["in_proj"]
+    proj = shard(proj, "batch", "seq", "inner")
+    z, xBC, dt_raw = jnp.split(proj, [inner, 2 * inner + 2 * n], axis=-1)
+    A = -jnp.exp(params["a_log"])                         # (H,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+
+    if cache is not None and L == 1:
+        xBC, conv_state = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                       cache["conv"])
+        xi, Bm, Cm = jnp.split(xBC, [inner, inner + n], axis=-1)
+        xh = xi.reshape(B, 1, H, P).astype(jnp.float32)
+        h = cache["ssm"]                                   # (B,H,n,P)
+        da = jnp.exp(dt[:, 0] * A)                         # (B,H)
+        dBx = jnp.einsum("bn,bhp,bh->bhnp", Bm[:, 0].astype(jnp.float32),
+                         xh[:, 0], dt[:, 0])
+        h_new = da[:, :, None, None] * h + dBx
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None] + params["d_skip"][None, None, :, None] * xh
+        new_cache = {"conv": conv_state, "ssm": h_new}
+    else:
+        xBC_raw = xBC
+        xBC, _ = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        xi, Bm, Cm = jnp.split(xBC, [inner, inner + n], axis=-1)
+        xh = xi.reshape(B, L, H, P)
+        y, hT = _ssd_chunk_scan(xh, Bm, Cm, dt, A)
+        y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        new_cache = None
+        if cache == "init":                                # prefill: emit state
+            W = cfg.ssm_conv
+            pad = jnp.zeros((B, W - 1, xBC_raw.shape[-1]), x.dtype)
+            conv_state = jnp.concatenate([pad, xBC_raw], axis=1)[:, -(W - 1):, :]
+            new_cache = {"conv": conv_state, "ssm": hT}
+    y = y.reshape(B, -1, inner).astype(x.dtype) * jax.nn.silu(z)
+    y = shard(y, "batch", "seq", "inner")
+    return y @ params["out_proj"], new_cache
+
+
+# ===================================================================== #
+# mLSTM (chunkwise-parallel with log-space stabilizers)
+# ===================================================================== #
+def mlstm_dims(cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    inner = 2 * d
+    H = cfg.n_heads
+    P = inner // H          # value head dim
+    Pk = max(P // 2, 4)     # q/k head dim
+    return d, inner, H, P, Pk
+
+
+def init_mlstm(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d, inner, H, P, Pk = mlstm_dims(cfg, d_model)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_v": dense_init(ks[0], d, inner, cfg.dtype),
+        "w_z": dense_init(ks[1], d, inner, cfg.dtype),
+        "w_q": dense_init(ks[2], d, H * Pk, cfg.dtype),
+        "w_k": dense_init(ks[3], d, H * Pk, cfg.dtype),
+        "w_gates": dense_init(ks[4], d, 2 * H, jnp.float32),  # i, f preacts
+        "b_gates": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "out_proj": dense_init(ks[5], inner, d, cfg.dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf):
+    """q,k: (B,L,H,Pk); v: (B,L,H,P); li,lf: (B,L,H) log gates.
+
+    Returns h: (B,L,H,P), final (C, n, m).
+    """
+    B, L, H, Pk = q.shape
+    P = v.shape[-1]
+    Lc = min(CHUNK, L)
+    assert L % Lc == 0
+    nc = L // Lc
+    r = lambda t: t.reshape((B, nc, Lc) + t.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, lic, lfc = map(r, (q, k, v, li, lf))
+    scale = 1.0 / math.sqrt(Pk)
+
+    def body(carry, inp):
+        C, n, m = carry                     # (B,H,Pk,P), (B,H,Pk), (B,H)
+        qk_, kk, vk, lik, lfk = inp
+        cumf = jnp.cumsum(lfk, axis=1)      # (B,Lc,H)
+        # log-weights: intra (t from s): cumf_t - cumf_s + li_s ; inter: cumf_t + m
+        logw_intra = (cumf[:, :, None, :] - cumf[:, None, :, :]
+                      + lik[:, None, :, :])                  # (B,Lc,Lc,H) [t,s]
+        causal = jnp.tril(jnp.ones((Lc, Lc), bool))[None, :, :, None]
+        logw_intra = jnp.where(causal, logw_intra, -jnp.inf)
+        logw_inter = cumf + m[:, None, :]                    # (B,Lc,H)
+        m_row = jnp.maximum(jnp.max(logw_intra, axis=2), logw_inter)  # (B,Lc,H)
+        m_row = jnp.maximum(m_row, -1e30)
+        D = jnp.exp(logw_intra - m_row[:, :, None, :])       # (B,Lc,Lc,H)
+        w_inter = jnp.exp(logw_inter - m_row)                # (B,Lc,H)
+        qk = jnp.einsum("blhp,bshp->blsh", qk_, kk) * scale  # (B,Lc,Lc,H)
+        scores = qk * D
+        num = (jnp.einsum("blsh,bshp->blhp", scores, vk)
+               + jnp.einsum("blhk,bhkp,blh->blhp", qk_, C, w_inter) * scale)
+        den = (jnp.sum(scores, axis=2)
+               + jnp.einsum("blhk,bhk,blh->blh", qk_, n, w_inter) * scale)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+        # chunk-boundary state update
+        cum_end = cumf[:, -1]                                # (B,H)
+        lw_src = lik + cum_end[:, None, :] - cumf            # (B,Lc,H)
+        m_next = jnp.maximum(cum_end + m, jnp.max(lw_src, axis=1))
+        w_old = jnp.exp(cum_end + m - m_next)                # (B,H)
+        w_src = jnp.exp(lw_src - m_next[:, None, :])         # (B,Lc,H)
+        C_next = (w_old[:, :, None, None] * C
+                  + jnp.einsum("bshk,bshp,bsh->bhkp", kk, vk, w_src))
+        n_next = w_old[:, :, None] * n + jnp.einsum("bshk,bsh->bhk", kk, w_src)
+        return (C_next, n_next, m_next), h
+
+    C0 = jnp.zeros((B, H, Pk, P), jnp.float32)
+    n0 = jnp.zeros((B, H, Pk), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (Ct, nt, mt), hc = jax.lax.scan(
+        body, (C0, n0, m0),
+        tuple(t.astype(jnp.float32) for t in (qc, kc, vc, lic, lfc)))
+    h = hc.swapaxes(0, 1).reshape(B, L, H, P)
+    return h, (Ct, nt, mt)
+
+
+def apply_mlstm(params, cfg: ModelConfig, x, cache: Optional[Dict] = None,
+                d_model: Optional[int] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    d, inner, H, P, Pk = mlstm_dims(cfg, d_model)
+    B, L, _ = x.shape
+    v = (x @ params["w_v"]).reshape(B, L, H, P)
+    z = x @ params["w_z"]
+    q = (x @ params["w_q"]).reshape(B, L, H, Pk)
+    k = (x @ params["w_k"]).reshape(B, L, H, Pk)
+    v = shard(v, "batch", None, None, "inner")
+    gates = (x.astype(jnp.float32) @ params["w_gates"]) + params["b_gates"]
+    li, lf = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+
+    if cache is not None and L == 1 and isinstance(cache, dict):
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        lik, lfk = li[:, 0], lf[:, 0]                        # (B,H)
+        m_next = jnp.maximum(lfk + m, lik)
+        w_old = jnp.exp(lfk + m - m_next)
+        w_new = jnp.exp(lik - m_next)
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        qf = q[:, 0].astype(jnp.float32) / math.sqrt(Pk)
+        C_next = w_old[:, :, None, None] * C + w_new[:, :, None, None] * \
+            jnp.einsum("bhk,bhp->bhkp", kf, vf)
+        n_next = w_old[:, :, None] * n + w_new[:, :, None] * kf
+        num = jnp.einsum("bhk,bhkp->bhp", qf, C_next)
+        den = jnp.einsum("bhk,bhk->bh", qf, n_next)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_next))[..., None]
+        h = h[:, None]
+        new_cache = {"C": C_next, "n": n_next, "m": m_next}
+    else:
+        h, (Ct, nt, mt) = _mlstm_chunk_scan(q, k, v, li, lf)
+        new_cache = {"C": Ct, "n": nt, "m": mt} if cache == "init" else None
+    y = h.reshape(B, -1, inner).astype(x.dtype) * jax.nn.silu(z)
+    y = shard(y, "batch", "seq", "inner")
+    return y @ params["out_proj"], new_cache
+
+
+# ===================================================================== #
+# sLSTM (sequential scan; recurrent weights make it non-parallelizable)
+# ===================================================================== #
+def init_slstm(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, cfg.dtype),      # z, i, f, o preacts
+        "r": (jax.random.normal(ks[1], (4, H, dh, dh)) / math.sqrt(dh)).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((3 * d,)), jnp.zeros((d,))]).astype(jnp.float32),
+        "out_proj": dense_init(ks[2], d, d, cfg.dtype),
+    }
+
+
+def apply_slstm(params, cfg: ModelConfig, x, cache: Optional[Dict] = None,
+                d_model: Optional[int] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    d = d_model or cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    B, L, _ = x.shape
+    pre_all = (x @ params["w_in"]).astype(jnp.float32) + params["b"]  # (B,L,4d)
+
+    def step(carry, pre_t):
+        h, c, n, m = carry                                   # (B,d) fp32, m:(B,d)
+        hh = h.reshape(B, H, dh)
+        rec = jnp.concatenate([
+            jnp.einsum("bhd,hde->bhe", hh, params["r"][g]).reshape(B, d)
+            for g in range(4)], axis=-1)                     # (B,4d)
+        zi, ii, fi, oi = jnp.split(pre_t + rec, 4, axis=-1)
+        m_new = jnp.maximum(fi + m, ii)
+        i_g = jnp.exp(ii - m_new)
+        f_g = jnp.exp(fi + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(zi)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(oi) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    if cache is not None and isinstance(cache, dict):
+        carry0 = (cache["h"], cache["c"], cache["n"], cache["m"])
+    else:
+        z0 = jnp.zeros((B, d), jnp.float32)
+        carry0 = (z0, z0, z0, jnp.full((B, d), -1e30, jnp.float32))
+    carry, hs = jax.lax.scan(step, carry0, pre_all.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    new_cache = None
+    if cache == "init" or isinstance(cache, dict):
+        h, c, n, m = carry
+        new_cache = {"h": h, "c": c, "n": n, "m": m}
+    return y @ params["out_proj"], new_cache

@@ -1,0 +1,468 @@
+"""Model assembly for all assigned architecture families.
+
+Families:
+  attention-stack : dense | moe | vlm | audio  (scan over L blocks)
+  xlstm           : groups of (slstm_every-1) mLSTM + 1 sLSTM blocks
+  hybrid (zamba2) : segments of `shared_attn_every` Mamba2 blocks, with ONE
+                    shared attention+MLP block re-applied after each segment
+
+Pure-functional: ``init_params(key, cfg)`` -> pytree; ``apply`` /
+``prefill`` / ``decode_step``. Layer params are stacked on a leading dim and
+consumed by ``lax.scan`` (small HLO, fast compile); ``cfg.remat`` wraps each
+block in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.axes import shard
+from repro.models import ssm
+from repro.models.attention import apply_attention, init_attention
+from repro.models.layers import (apply_mlp, apply_norm, dense_init, embed_init,
+                                 init_mlp, init_norm)
+from repro.models.moe import apply_moe, init_moe
+
+
+# --------------------------------------------------------------------- #
+# single blocks
+# --------------------------------------------------------------------- #
+def init_attn_block(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": init_norm(k1, cfg.d_model, cfg.norm, cfg.dtype),
+         "attn": init_attention(k2, cfg),
+         "norm2": init_norm(k3, cfg.d_model, cfg.norm, cfg.dtype)}
+    if cfg.is_moe:
+        p["moe"] = init_moe(k4, cfg)
+    else:
+        p["mlp"] = init_mlp(k4, cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype)
+    return p
+
+
+def apply_attn_block(p, cfg: ModelConfig, x, positions, cache, cache_index):
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    attn_out, new_cache = apply_attention(p["attn"], cfg, h, positions,
+                                          cache, cache_index)
+    x = x + attn_out
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    if cfg.is_moe:
+        mlp_out, aux = apply_moe(p["moe"], cfg, h)
+    else:
+        mlp_out, aux = apply_mlp(p["mlp"], h, cfg.act), {}
+    x = x + mlp_out
+    x = shard(x, "batch", "seq", "embed")
+    return x, new_cache, aux
+
+
+def init_ssm_block(key, cfg: ModelConfig, kind: str):
+    k1, k2 = jax.random.split(key)
+    inits = {"mamba2": ssm.init_mamba2, "mlstm": ssm.init_mlstm,
+             "slstm": ssm.init_slstm}
+    return {"norm": init_norm(k1, cfg.d_model, cfg.norm, cfg.dtype),
+            "core": inits[kind](k2, cfg)}
+
+
+def apply_ssm_block(p, cfg: ModelConfig, x, kind: str, cache):
+    h = apply_norm(p["norm"], x, cfg.norm)
+    applies = {"mamba2": ssm.apply_mamba2, "mlstm": ssm.apply_mlstm,
+               "slstm": ssm.apply_slstm}
+    out, new_cache = applies[kind](p["core"], cfg, h, cache)
+    x = x + out
+    x = shard(x, "batch", "seq", "embed")
+    return x, new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _stack_init(key, n: int, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------- #
+# io: embeddings + heads per family
+# --------------------------------------------------------------------- #
+def init_io(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm_f": init_norm(k1, cfg.d_model, cfg.norm, cfg.dtype)}
+    if cfg.n_codebooks:  # audio: per-codebook tables + heads
+        p["embed"] = jax.vmap(lambda k: embed_init(k, cfg.vocab_size, cfg.d_model,
+                                                   cfg.dtype))(
+            jax.random.split(k2, cfg.n_codebooks))
+        p["head"] = jax.vmap(lambda k: dense_init(k, cfg.d_model, cfg.vocab_size,
+                                                  cfg.dtype))(
+            jax.random.split(k3, cfg.n_codebooks))
+    else:
+        p["embed"] = embed_init(k2, cfg.vocab_size, cfg.d_model, cfg.dtype)
+        if not cfg.tie_embeddings:
+            p["head"] = dense_init(k3, cfg.d_model, cfg.vocab_size, cfg.dtype)
+    return p
+
+
+def embed_inputs(p, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """batch: {"tokens": ...} or {"embeddings": ...}; optional "positions"."""
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(cfg.dtype)
+    elif cfg.n_codebooks:
+        toks = batch["tokens"]  # (B, S, nq)
+        x = sum(jnp.take(p["embed"][q], toks[..., q], axis=0)
+                for q in range(cfg.n_codebooks))
+    else:
+        x = jnp.take(p["embed"], batch["tokens"], axis=0)
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = shard(x, "batch", "seq", "embed")
+    return x, positions
+
+
+def unembed(p, cfg: ModelConfig, h):
+    h = apply_norm(p["norm_f"], h, cfg.norm)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bsd,qdv->bsqv", h, p["head"])
+        return shard(logits.astype(jnp.float32), "batch", None, None, "vocab")
+    if cfg.tie_embeddings:
+        logits = h @ p["embed"].T
+    else:
+        logits = h @ p["head"]
+    return shard(logits.astype(jnp.float32), "batch", None, "vocab")
+
+
+# --------------------------------------------------------------------- #
+# family stacks: init
+# --------------------------------------------------------------------- #
+def xlstm_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, mlstm_per_group, tail_mlstm). every `slstm_every`th = sLSTM."""
+    if not cfg.slstm_every:
+        return 0, 0, cfg.n_layers
+    g = cfg.n_layers // cfg.slstm_every
+    tail = cfg.n_layers - g * cfg.slstm_every
+    return g, cfg.slstm_every - 1, tail
+
+
+def zamba_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    seg = cfg.shared_attn_every
+    n_seg = cfg.n_layers // seg
+    tail = cfg.n_layers - n_seg * seg
+    return n_seg, seg, tail
+
+
+def init_params(key, cfg: ModelConfig):
+    kio, kb, ks, kt = jax.random.split(key, 4)
+    params: Dict[str, Any] = {"io": init_io(kio, cfg)}
+    if cfg.block_kind == "attention":
+        params["blocks"] = _stack_init(kb, cfg.n_layers,
+                                       lambda k: init_attn_block(k, cfg))
+    elif cfg.block_kind == "xlstm":
+        g, m_per, tail = xlstm_layout(cfg)
+        if g:
+            params["mlstm"] = _stack_init(
+                kb, g * m_per, lambda k: init_ssm_block(k, cfg, "mlstm"))
+            params["mlstm"] = jax.tree_util.tree_map(
+                lambda t: t.reshape((g, m_per) + t.shape[1:]), params["mlstm"])
+            params["slstm"] = _stack_init(
+                ks, g, lambda k: init_ssm_block(k, cfg, "slstm"))
+        if tail:
+            params["mlstm_tail"] = _stack_init(
+                kt, tail, lambda k: init_ssm_block(k, cfg, "mlstm"))
+    else:  # mamba2 / hybrid
+        if cfg.shared_attn_every:
+            n_seg, seg, tail = zamba_layout(cfg)
+            params["mamba"] = _stack_init(
+                kb, n_seg * seg, lambda k: init_ssm_block(k, cfg, "mamba2"))
+            params["mamba"] = jax.tree_util.tree_map(
+                lambda t: t.reshape((n_seg, seg) + t.shape[1:]), params["mamba"])
+            params["shared"] = init_attn_block(ks, cfg)
+            if tail:
+                params["mamba_tail"] = _stack_init(
+                    kt, tail, lambda k: init_ssm_block(k, cfg, "mamba2"))
+        else:
+            params["mamba"] = _stack_init(
+                kb, cfg.n_layers, lambda k: init_ssm_block(k, cfg, "mamba2"))
+    return params
+
+
+# --------------------------------------------------------------------- #
+# caches
+# --------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, shapes_only=False):
+    """Zeroed decode cache (or ShapeDtypeStructs for the dry-run)."""
+    hd = cfg.resolved_head_dim
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if shapes_only else \
+         (lambda s, d: jnp.zeros(s, d))
+    kv_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+    def attn_cache(lead=()):
+        s = lead + (batch, kv_len, cfg.n_kv_heads, hd)
+        return {"k": mk(s, cfg.dtype), "v": mk(s, cfg.dtype)}
+
+    def mamba_cache(lead=()):
+        d, inner, H, P, n = ssm.mamba2_dims(cfg)
+        return {"conv": mk(lead + (batch, cfg.ssm_conv - 1, inner + 2 * n), cfg.dtype),
+                "ssm": mk(lead + (batch, H, n, P), jnp.float32)}
+
+    def mlstm_cache(lead=()):
+        d, inner, H, P, Pk = ssm.mlstm_dims(cfg)
+        return {"C": mk(lead + (batch, H, Pk, P), jnp.float32),
+                "n": mk(lead + (batch, H, Pk), jnp.float32),
+                "m": mk(lead + (batch, H), jnp.float32)}
+
+    def slstm_cache(lead=()):
+        d = cfg.d_model
+        return {k: mk(lead + (batch, d), jnp.float32) for k in ("h", "c", "n", "m")}
+
+    if cfg.block_kind == "attention":
+        return {"blocks": attn_cache((cfg.n_layers,))}
+    if cfg.block_kind == "xlstm":
+        g, m_per, tail = xlstm_layout(cfg)
+        c = {}
+        if g:
+            c["mlstm"] = mlstm_cache((g, m_per))
+            c["slstm"] = slstm_cache((g,))
+        if tail:
+            c["mlstm_tail"] = mlstm_cache((tail,))
+        return c
+    if cfg.shared_attn_every:
+        n_seg, seg, tail = zamba_layout(cfg)
+        c = {"mamba": mamba_cache((n_seg, seg)), "shared": attn_cache((n_seg,))}
+        if tail:
+            c["mamba_tail"] = mamba_cache((tail,))
+        return c
+    return {"mamba": mamba_cache((cfg.n_layers,))}
+
+
+# --------------------------------------------------------------------- #
+# stacks: apply
+# --------------------------------------------------------------------- #
+def _scan_stack(apply_one, params_stacked, x, cache_stacked, cfg: ModelConfig):
+    """Scan (or unrolled loop) over a stacked homogeneous block stack.
+
+    apply_one(p, x, c) -> (x, new_c, aux). aux must be shape-stable.
+    """
+    n = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
+    fn = _maybe_remat(apply_one, cfg)
+    if not cfg.scan_layers:
+        caches, auxes = [], []
+        for i in range(n):
+            p = jax.tree_util.tree_map(lambda t: t[i], params_stacked)
+            c = (jax.tree_util.tree_map(lambda t: t[i], cache_stacked)
+                 if cache_stacked is not None else None)
+            x, nc, aux = fn(p, x, c)
+            caches.append(nc)
+            auxes.append(aux)
+        new_cache = (jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *caches)
+                     if caches and caches[0] is not None else None)
+        aux = (jax.tree_util.tree_map(lambda *ts: sum(ts), *auxes)
+               if auxes and auxes[0] else {})
+        return x, new_cache, aux
+
+    def body(carry, layer):
+        p, c = layer
+        y, nc, aux = fn(p, carry, c)
+        return y, (nc, aux)
+
+    xs = (params_stacked, cache_stacked)
+    x, (new_cache, auxes) = jax.lax.scan(body, x, xs)
+    aux = jax.tree_util.tree_map(lambda t: jnp.sum(t), auxes) if auxes else {}
+    return x, new_cache, aux
+
+
+def apply_model(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                cache=None, cache_index=None, return_hidden=False):
+    """Forward pass. Returns (logits, new_cache, aux) — or the final hidden
+    states instead of logits when return_hidden=True (chunked-loss path).
+
+    cache semantics: None = train; "init" = prefill (build cache);
+    pytree = decode (S==1, update at cache_index).
+    """
+    x, positions = embed_inputs(params["io"], cfg, batch)
+    want_cache = cache is not None
+    prefill = isinstance(cache, str) and cache == "init"
+    if want_cache and not prefill and "positions" not in batch:
+        # decode: the single token sits at absolute position cache_index
+        B = x.shape[0]
+        shape = (3, B, 1) if cfg.mrope_sections else (B, 1)
+        positions = jnp.broadcast_to(
+            jnp.asarray(cache_index, jnp.int32), shape)
+
+    def sub(c, *path):
+        if not want_cache:
+            return None
+        if prefill:
+            return "init"
+        out = c
+        for p in path:
+            out = out[p]
+        return out
+
+    aux_total: Dict[str, jnp.ndarray] = {}
+    new_cache: Dict[str, Any] = {}
+
+    if cfg.block_kind == "attention":
+        if prefill:
+            def one_p(p, x, _c):
+                return apply_attn_block(p, cfg, x, positions, "init",
+                                        0 if cache_index is None else cache_index)
+
+            def body(carry, p):
+                y, nc, aux = _maybe_remat(
+                    lambda pp, xx: one_p(pp, xx, None), cfg)(p, carry)
+                return y, (nc, aux)
+            x, (nc, auxes) = jax.lax.scan(body, x, params["blocks"]) \
+                if cfg.scan_layers else _loop_prefill(one_p, params["blocks"], x)
+            new_cache["blocks"] = nc
+            aux_total = jax.tree_util.tree_map(jnp.sum, auxes) if auxes else {}
+        else:
+            def one(p, x, c):
+                return apply_attn_block(p, cfg, x, positions, c, cache_index)
+            x, nc, aux_total = _scan_stack(one, params["blocks"], x,
+                                           sub(cache, "blocks"), cfg)
+            if want_cache:
+                new_cache["blocks"] = nc
+
+    elif cfg.block_kind == "xlstm":
+        g, m_per, tail = xlstm_layout(cfg)
+        if g:
+            x, nc, _ = _apply_xlstm_groups(params, cfg, x, cache, prefill,
+                                           want_cache)
+            if want_cache:
+                new_cache.update(nc)
+        if tail:
+            def one_t(p, xx, c):
+                y, ncc = apply_ssm_block(p, cfg, xx, "mlstm",
+                                         "init" if prefill else c)
+                return y, ncc, {}
+            x, nct, _ = _scan_stack(one_t, params["mlstm_tail"], x,
+                                    sub(cache, "mlstm_tail"), cfg)
+            if want_cache:
+                new_cache["mlstm_tail"] = nct
+
+    else:  # mamba2 / hybrid
+        if cfg.shared_attn_every:
+            x, nc = _apply_zamba(params, cfg, x, positions, cache, cache_index,
+                                 prefill, want_cache)
+            if want_cache:
+                new_cache.update(nc)
+        else:
+            def one(p, xx, c):
+                y, ncc = apply_ssm_block(p, cfg, xx, "mamba2",
+                                         "init" if prefill else c)
+                return y, ncc, {}
+            x, nc, _ = _scan_stack(one, params["mamba"], x,
+                                   sub(cache, "mamba"), cfg)
+            if want_cache:
+                new_cache["mamba"] = nc
+
+    if return_hidden:
+        return x, (new_cache if want_cache else None), aux_total
+    logits = unembed(params["io"], cfg, x)
+    return logits, (new_cache if want_cache else None), aux_total
+
+
+def _loop_prefill(one_p, blocks, x):
+    n = jax.tree_util.tree_leaves(blocks)[0].shape[0]
+    caches, auxes = [], []
+    for i in range(n):
+        p = jax.tree_util.tree_map(lambda t: t[i], blocks)
+        x, nc, aux = one_p(p, x, None)
+        caches.append(nc)
+        auxes.append(aux)
+    nc = jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *caches)
+    auxes = (jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *auxes)
+             if auxes and auxes[0] else {})
+    return x, (nc, auxes)
+
+
+def _apply_xlstm_groups(params, cfg, x, cache, prefill, want_cache):
+    g, m_per, tail = xlstm_layout(cfg)
+
+    def one_m(p, xx, c):
+        y, nc = apply_ssm_block(p, cfg, xx, "mlstm", "init" if prefill else c)
+        return y, nc, {}
+
+    def group_body(x, inp):
+        mp, sp, mc, sc = inp
+        x, new_mc, _ = _scan_stack(one_m, mp, x, mc, cfg)
+        x, new_sc = apply_ssm_block(sp, cfg, x, "slstm",
+                                    "init" if prefill else sc)
+        return x, (new_mc, new_sc)
+
+    if cfg.scan_layers and not prefill and cache is None:
+        def body(carry, inp):
+            mp, sp = inp
+            y, _ = group_body(carry, (mp, sp, None, None))
+            return y, None
+        x, _ = jax.lax.scan(body, x, (params["mlstm"], params["slstm"]))
+        return x, {}, {}
+    # decode / prefill / unrolled: python loop over groups
+    mcs, scs = [], []
+    for i in range(g):
+        mp = jax.tree_util.tree_map(lambda t: t[i], params["mlstm"])
+        sp = jax.tree_util.tree_map(lambda t: t[i], params["slstm"])
+        mc = (jax.tree_util.tree_map(lambda t: t[i], cache["mlstm"])
+              if isinstance(cache, dict) else None)
+        sc = (jax.tree_util.tree_map(lambda t: t[i], cache["slstm"])
+              if isinstance(cache, dict) else None)
+        x, (nmc, nsc) = group_body(x, (mp, sp, mc, sc))
+        mcs.append(nmc)
+        scs.append(nsc)
+    out = {}
+    if want_cache and mcs:
+        out["mlstm"] = jax.tree_util.tree_map(lambda *t: jnp.stack(t), *mcs)
+        out["slstm"] = jax.tree_util.tree_map(lambda *t: jnp.stack(t), *scs)
+    return x, out, {}
+
+
+def _apply_zamba(params, cfg, x, positions, cache, cache_index, prefill,
+                 want_cache):
+    n_seg, seg, tail = zamba_layout(cfg)
+
+    def one_m(p, xx, c):
+        y, nc = apply_ssm_block(p, cfg, xx, "mamba2", "init" if prefill else c)
+        return y, nc, {}
+
+    def seg_body(x, mp, mc, sc):
+        x, new_mc, _ = _scan_stack(one_m, mp, x, mc, cfg)
+        sh_c = "init" if prefill else sc
+        x, new_sc, _ = apply_attn_block(params["shared"], cfg, x, positions,
+                                        sh_c, cache_index)
+        return x, new_mc, new_sc
+
+    if cfg.scan_layers and cache is None:
+        seg_fn = _maybe_remat(lambda c, p: seg_body(c, p, None, None)[0], cfg)
+
+        def body(carry, mp):
+            return seg_fn(carry, mp), None
+        x, _ = jax.lax.scan(body, x, params["mamba"])
+    else:
+        mcs, scs = [], []
+        for i in range(n_seg):
+            mp = jax.tree_util.tree_map(lambda t: t[i], params["mamba"])
+            mc = (jax.tree_util.tree_map(lambda t: t[i], cache["mamba"])
+                  if isinstance(cache, dict) else None)
+            sc = (jax.tree_util.tree_map(lambda t: t[i], cache["shared"])
+                  if isinstance(cache, dict) else None)
+            x, nmc, nsc = seg_body(x, mp, mc, sc)
+            mcs.append(nmc)
+            scs.append(nsc)
+    new_cache = {}
+    if want_cache and not (cfg.scan_layers and cache is None):
+        new_cache["mamba"] = jax.tree_util.tree_map(lambda *t: jnp.stack(t), *mcs)
+        new_cache["shared"] = jax.tree_util.tree_map(lambda *t: jnp.stack(t), *scs)
+    if tail:
+        def one_t(p, xx, c):
+            y, nc = apply_ssm_block(p, cfg, xx, "mamba2", "init" if prefill else c)
+            return y, nc, {}
+        x, nct, _ = _scan_stack(
+            one_t, params["mamba_tail"], x,
+            cache["mamba_tail"] if isinstance(cache, dict) else None, cfg)
+        if want_cache:
+            new_cache["mamba_tail"] = nct
+    return x, new_cache

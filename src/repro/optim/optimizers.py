@@ -1,0 +1,91 @@
+"""Optimizers on raw pytrees (optax is not available offline).
+
+API mirrors optax minimally: ``opt = adamw(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply(params,
+updates)`` — updates are *deltas to add*.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (grads, state, params) -> (updates, state)
+
+
+def _tm(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+    return sched
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return _tm(lambda g: g * scale, grads), gn
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        mu = _tm(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        if momentum:
+            mu = _tm(lambda m, g: momentum * m + g, state["mu"], grads)
+            upd = _tm(lambda m: (-lr_t * m).astype(m.dtype), mu)
+            return upd, {"step": step, "mu": mu}
+        return _tm(lambda g: (-lr_t * g).astype(g.dtype), grads), {"step": step,
+                                                                   "mu": None}
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tm(zeros32, params), "v": _tm(zeros32, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        g32 = _tm(lambda g: g.astype(jnp.float32), grads)
+        m = _tm(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = _tm(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        return _tm(upd, m, v, params), {"step": step, "m": m, "v": v}
+    return Optimizer(init, update)

@@ -1,0 +1,2 @@
+from repro.serve.engine import (make_prefill_step, make_decode_step,
+                                ServeEngine)

@@ -1,0 +1,78 @@
+"""Serving path: prefill + single-token decode with KV / SSM-state caches.
+
+``decode_32k`` / ``long_500k`` dry-runs lower `decode_step` (ONE new token
+against a cache of seq_len). Sliding-window archs keep a ring-buffer cache
+of window size; SSM/hybrid archs keep O(1) recurrent state — that is what
+makes long_500k feasible (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.api import (decode_step as _decode, dummy_batch,
+                              make_decode_cache, prefill as _prefill)
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return _prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch, cache, cache_index):
+        logits, new_cache = _decode(params, cfg, batch, cache, cache_index)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return next_tok, logits, new_cache
+    return decode_step
+
+
+class ServeEngine:
+    """Small batched-request serving loop (greedy decode) for examples/tests."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg))
+
+    def generate(self, batch: Dict[str, jnp.ndarray], n_new: int = 16):
+        cfg = self.cfg
+        B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        prompt_len = (batch["embeddings"].shape[1]
+                      if cfg.input_mode == "embeddings"
+                      else batch["tokens"].shape[1])
+        logits, pre_cache = self._prefill(self.params, batch)
+        cache = make_decode_cache(cfg, B, self.max_len)
+        cache = jax.tree_util.tree_map(
+            lambda big, small: (big if big.shape == small.shape else
+                                jax.lax.dynamic_update_slice(
+                                    big, small.astype(big.dtype),
+                                    (0,) * big.ndim)),
+            cache, pre_cache)
+        toks = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)
+        for i in range(n_new):
+            if cfg.n_codebooks:
+                step_batch = {"tokens": tok.reshape(B, 1, -1)
+                              if tok.ndim > 1 else
+                              jnp.tile(tok[:, None, None], (1, 1, cfg.n_codebooks))}
+            elif cfg.input_mode == "embeddings":
+                emb = jnp.take(self.params["io"]["embed"], tok, axis=0) \
+                    if self.params["io"].get("embed") is not None else None
+                step_batch = {"embeddings": emb[:, None].astype(cfg.dtype)}
+            else:
+                step_batch = {"tokens": tok[:, None]}
+            tok, logits, cache = self._decode(self.params, step_batch, cache,
+                                              prompt_len + i)
+            if cfg.n_codebooks:
+                tok = jnp.argmax(logits[:, -1], axis=-1)  # (B, nq)
+            toks.append(np.asarray(tok))
+        return np.stack(toks, axis=1)

@@ -1,0 +1,2 @@
+from repro.train.step import (make_hapfl_train_step, make_train_state,
+                              TrainStepConfig)

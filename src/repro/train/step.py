@@ -1,0 +1,149 @@
+"""HAPFL transformer train step: joint (local model + LiteModel) KD step.
+
+This IS the paper's local training (Eqs. 33-35) applied to the assigned
+architectures: one forward of the heterogeneous local model, one forward of
+the homogeneous LiteModel, CE + bidirectional-KL losses, one joint
+optimizer update. The multi-pod dry-run lowers exactly this function.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.distill import LAMBDAS
+from repro.kernels.ops import mutual_kd_loss
+from repro.models.api import init_model
+from repro.models.transformer import apply_model
+from repro.optim import adamw, clip_by_global_norm
+from repro.utils.pytree import tree_add
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    lambdas: Tuple[float, float, float, float] = LAMBDAS
+    lr: float = 3e-4
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    moe_aux_coef: float = 0.01
+    z_loss_coef: float = 1e-3
+    microbatch: int = 0           # >0: grad-accumulate over microbatches
+    loss_chunk: int = 0           # >0: compute loss in sequence chunks
+
+
+def make_train_state(key, cfg_local: ModelConfig, cfg_lite: ModelConfig,
+                     tcfg: TrainStepConfig = TrainStepConfig()):
+    k1, k2 = jax.random.split(key)
+    params = {"local": init_model(k1, cfg_local),
+              "lite": init_model(k2, cfg_lite)}
+    opt = adamw(tcfg.lr, weight_decay=tcfg.weight_decay)
+    return {"params": params, "opt": opt.init(params)}
+
+
+def _losses(params, cfg_local, cfg_lite, tcfg, batch):
+    if tcfg.loss_chunk:
+        return _losses_chunked(params, cfg_local, cfg_lite, tcfg, batch)
+    logits_local, _, aux_local = apply_model(params["local"], cfg_local, batch)
+    logits_lite, _, aux_lite = apply_model(params["lite"], cfg_lite, batch)
+    loss, metrics = mutual_kd_loss(logits_local, logits_lite, batch["labels"],
+                                   lambdas=tcfg.lambdas)
+    for aux in (aux_local, aux_lite):
+        if aux:
+            loss = loss + tcfg.moe_aux_coef * aux.get("lb_loss", 0.0)
+            loss = loss + tcfg.z_loss_coef * aux.get("z_loss", 0.0)
+    if aux_local:
+        metrics = dict(metrics, lb_loss=aux_local.get("lb_loss", 0.0))
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _losses_chunked(params, cfg_local, cfg_lite, tcfg, batch):
+    """Sequence-chunked loss: the (B, S, V) fp32 logits of BOTH models are
+    the largest training activations (V up to 152k); computing unembed +
+    CE/KL one sequence chunk at a time caps the live logits at
+    (B, loss_chunk, V) — a pure memory-term optimization (same math)."""
+    from repro.models.transformer import unembed
+
+    h_local, _, aux_local = apply_model(params["local"], cfg_local, batch,
+                                        return_hidden=True)
+    h_lite, _, aux_lite = apply_model(params["lite"], cfg_lite, batch,
+                                      return_hidden=True)
+    labels = batch["labels"]
+    S = h_local.shape[1]
+    ck = min(tcfg.loss_chunk, S)
+    assert S % ck == 0
+    nc = S // ck
+
+    def body(carry, i):
+        sl = jax.lax.dynamic_slice_in_dim
+        ll = unembed(params["local"]["io"], cfg_local,
+                     sl(h_local, i * ck, ck, 1))
+        lt = unembed(params["lite"]["io"], cfg_lite,
+                     sl(h_lite, i * ck, ck, 1))
+        lab = sl(labels, i * ck, ck, 1)
+        loss_c, m = mutual_kd_loss(ll, lt, lab, lambdas=tcfg.lambdas)
+        return carry + loss_c / nc, m
+
+    loss, metrics = jax.lax.scan(body, 0.0, jnp.arange(nc))
+    metrics = jax.tree_util.tree_map(lambda t: jnp.mean(t), metrics)
+    for aux in (aux_local, aux_lite):
+        if aux:
+            loss = loss + tcfg.moe_aux_coef * aux.get("lb_loss", 0.0)
+            loss = loss + tcfg.z_loss_coef * aux.get("z_loss", 0.0)
+    if aux_local:
+        metrics = dict(metrics, lb_loss=aux_local.get("lb_loss", 0.0))
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_hapfl_train_step(cfg_local: ModelConfig, cfg_lite: ModelConfig,
+                          tcfg: TrainStepConfig = TrainStepConfig()):
+    """Returns train_step(state, batch) -> (state, metrics). Not yet jitted —
+    launch.dryrun/launch.train wrap it with jit + shardings."""
+    opt = adamw(tcfg.lr, weight_decay=tcfg.weight_decay)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if tcfg.microbatch > 1:
+            # grad accumulation: split the batch axis into n microbatches
+            n = tcfg.microbatch
+
+            def split(k, x):
+                if k == "positions" and x.ndim == 3:   # (3, B, S) M-RoPE
+                    return x.reshape((x.shape[0], n, x.shape[1] // n)
+                                     + x.shape[2:]).swapaxes(0, 1)
+                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+            mb = {k: split(k, v) for k, v in batch.items()}
+
+            def body(carry, b):
+                loss_a, grads_a = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: _losses(p, cfg_local, cfg_lite, tcfg, b),
+                    has_aux=True)(params)
+                grads = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / n, grads_a, grads)
+                return (loss_a + loss / n, grads), metrics
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), metrics = jax.lax.scan(body, (0.0, zero_g), mb)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: _losses(p, cfg_local, cfg_lite, tcfg, batch),
+                has_aux=True)(params)
+
+        if tcfg.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+            metrics["grad_norm"] = gnorm
+        updates, opt_state = opt.update(grads, state["opt"], params)
+        params = tree_add(params, updates)
+        return {"params": params, "opt": opt_state}, metrics
+
+    return train_step

@@ -1,0 +1,4 @@
+from repro.utils.pytree import (
+    tree_add, tree_scale, tree_sub, tree_zeros_like, tree_weighted_sum,
+    tree_norm, tree_size, tree_cast,
+)

@@ -1,0 +1,45 @@
+"""Small pytree helpers used across the framework (no optax offline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_i weights[i] * trees[i] — used by weighted FL aggregation."""
+    assert len(trees) == len(weights) and trees
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = tree_add(out, tree_scale(t, w))
+    return out
+
+
+def tree_norm(a):
+    leaves = jax.tree_util.tree_leaves(a)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_size(a) -> int:
+    """Total number of parameters in a pytree."""
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(a)))
+
+
+def tree_cast(a, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a)

@@ -1,0 +1,94 @@
+"""PPO agent unit tests: math + learning on toy environments."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ppo import PPOAgent, PPOConfig, discounted_returns
+
+
+def test_discounted_returns():
+    r = jnp.asarray([1.0, 0.0, 2.0])
+    g = discounted_returns(r, 0.5)
+    np.testing.assert_allclose(np.asarray(g), [1 + 0.5 * (0 + 0.5 * 2),
+                                               0 + 0.5 * 2, 2.0])
+
+
+def test_categorical_multihead_act_shapes():
+    cfg = PPOConfig(state_dim=6, kind="categorical_multihead", n_categories=3)
+    agent = PPOAgent(cfg, jax.random.PRNGKey(0))
+    a, lp = agent.act(jax.random.PRNGKey(1), np.ones(6, np.float32))
+    assert a.shape == (6,) and set(np.unique(a)) <= {0, 1, 2}
+    assert np.isfinite(lp)
+
+
+def test_gaussian_simplex_act():
+    cfg = PPOConfig(state_dim=4, kind="gaussian_simplex")
+    agent = PPOAgent(cfg, jax.random.PRNGKey(0))
+    a, lp = agent.act(jax.random.PRNGKey(1), np.ones(4, np.float32))
+    assert a.shape == (4,) and np.isfinite(lp)
+    det, _ = agent.act(jax.random.PRNGKey(2), np.ones(4, np.float32),
+                       deterministic=True)
+    det2, _ = agent.act(jax.random.PRNGKey(3), np.ones(4, np.float32),
+                        deterministic=True)
+    np.testing.assert_allclose(det, det2)
+
+
+def test_buffer_update_cycle():
+    cfg = PPOConfig(state_dim=3, kind="categorical_multihead", n_categories=2,
+                    buffer_size=4)
+    agent = PPOAgent(cfg, jax.random.PRNGKey(0))
+    for i in range(3):
+        s = np.random.rand(3).astype(np.float32)
+        a, lp = agent.act(jax.random.PRNGKey(i), s)
+        agent.store(s, a, lp, float(i))
+        assert agent.maybe_update() is None
+    s = np.random.rand(3).astype(np.float32)
+    a, lp = agent.act(jax.random.PRNGKey(9), s)
+    agent.store(s, a, lp, 1.0)
+    metrics = agent.maybe_update()
+    assert metrics is not None and np.isfinite(metrics["loss"])
+    assert agent.buffer == []
+
+
+def test_categorical_learns_state_dependent_bandit():
+    """Reward = +1 iff action matches a state-derived target; PPO must beat
+    random (0.5) decisively."""
+    k = 4
+    cfg = PPOConfig(state_dim=k, kind="categorical_multihead", n_categories=2,
+                    lr=1e-3, buffer_size=16, update_epochs=16, gamma=0.0,
+                    entropy_coef=0.001)
+    agent = PPOAgent(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(42)
+    hits = []
+    for t in range(800):
+        s = rng.uniform(0.5, 2.0, size=k).astype(np.float32)
+        target = (s > 1.25).astype(int)
+        key, sub = jax.random.split(key)
+        a, lp = agent.act(sub, s)
+        reward = float(np.mean(a == target))
+        hits.append(reward)
+        agent.store(s, a, lp, reward)
+        agent.maybe_update()
+    assert np.mean(hits[-150:]) > 0.75, np.mean(hits[-150:])
+
+
+def test_gaussian_improves_alignment_reward():
+    """Reward favors action aligned with -state; PPO should increase it."""
+    k = 4
+    cfg = PPOConfig(state_dim=k, kind="gaussian_simplex", lr=1e-3,
+                    buffer_size=8, update_epochs=8)
+    agent = PPOAgent(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    key = jax.random.PRNGKey(7)
+    rewards = []
+    for t in range(400):
+        s = rng.uniform(0.5, 2.0, size=k).astype(np.float32)
+        key, sub = jax.random.split(key)
+        a, lp = agent.act(sub, s)
+        reward = -float(np.mean((np.asarray(a) + s) ** 2))
+        rewards.append(reward)
+        agent.store(s, a, lp, reward)
+        agent.maybe_update()
+    assert np.mean(rewards[-80:]) > np.mean(rewards[:80])

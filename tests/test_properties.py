@@ -1,0 +1,90 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (aggregation_weights, fedavg_aggregate,
+                                    information_entropy, weighted_aggregate)
+from repro.core.latency import ClientProfile, LatencyModel
+from repro.core.ppo import discounted_returns
+from repro.launch.hlo_analysis import shape_bytes
+
+floats = st.floats(min_value=0.01, max_value=100.0, allow_nan=False)
+
+
+@given(st.lists(floats, min_size=2, max_size=16),
+       st.lists(st.floats(0.0, 1.0), min_size=2, max_size=16))
+@settings(max_examples=50, deadline=None)
+def test_aggregation_weights_simplex(ent, acc):
+    n = min(len(ent), len(acc))
+    w = aggregation_weights(ent[:n], acc[:n])
+    assert w.shape == (n,)
+    assert abs(w.sum() - 1.0) < 1e-9
+    assert (w >= 0).all()
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_entropy_bounds(counts):
+    h = information_entropy(counts)
+    n_nonzero = sum(1 for c in counts if c > 0)
+    assert h >= -1e-12
+    if n_nonzero:
+        assert h <= np.log2(max(n_nonzero, 1)) + 1e-9
+
+
+@given(st.integers(0, 2**31 - 1), st.lists(floats, min_size=3, max_size=3))
+@settings(max_examples=30, deadline=None)
+def test_weighted_aggregate_convexity(seed, ws):
+    """Aggregate of identical trees is that tree; aggregate stays in hull."""
+    rng = np.random.default_rng(seed)
+    trees = [{"a": rng.standard_normal(4).astype(np.float32)} for _ in range(3)]
+    agg = weighted_aggregate(trees[0], trees, np.asarray(ws))
+    lo = np.min([t["a"] for t in trees], axis=0) - 1e-5
+    hi = np.max([t["a"] for t in trees], axis=0) + 1e-5
+    assert (agg["a"] >= lo).all() and (agg["a"] <= hi).all()
+    same = weighted_aggregate(trees[0], [trees[0]] * 3, np.asarray(ws))
+    np.testing.assert_allclose(same["a"], trees[0]["a"], atol=1e-6)
+
+
+@given(st.integers(1, 50), st.integers(1, 50))
+@settings(max_examples=30, deadline=None)
+def test_latency_monotone_in_intensity(tau1, tau2):
+    lm = LatencyModel({"small": 100.0, "large": 400.0}, 50.0, seed=0)
+    prof = ClientProfile(0, base_speed=2.0, dataset_size=100,
+                         jitter_sigma=0.0, drift_amp=0.0)
+    t1 = lm.local_train_time(prof, 0, "small", tau1)
+    t2 = lm.local_train_time(prof, 0, "small", tau2)
+    if tau1 < tau2:
+        assert t1 < t2
+    lm2 = LatencyModel({"small": 100.0, "large": 400.0}, 50.0, seed=0)
+    assert (lm2.local_train_time(prof, 0, "large", tau1)
+            > lm2.local_train_time(prof, 0, "small", tau1))
+
+
+@given(st.lists(st.floats(-10, 10), min_size=1, max_size=20),
+       st.floats(0.0, 0.99))
+@settings(max_examples=50, deadline=None)
+def test_discounted_returns_bound(rewards, gamma):
+    import jax.numpy as jnp
+    g = np.asarray(discounted_returns(jnp.asarray(rewards, jnp.float32),
+                                      gamma))
+    bound = max(abs(r) for r in rewards) / (1 - gamma + 1e-9) + 1e-3
+    assert (np.abs(g) <= bound).all()
+
+
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       st.sampled_from(["f32", "bf16", "s32", "pred"]))
+@settings(max_examples=50, deadline=None)
+def test_hlo_shape_bytes(dims, dt):
+    bytes_per = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1}[dt]
+    s = f"{dt}[{','.join(map(str, dims))}]{{0}}"
+    expected = bytes_per * int(np.prod(dims))
+    assert shape_bytes(s) == expected
+
+
+def test_fedavg_weighted_mean_exact():
+    t1 = {"a": np.ones(3, np.float32)}
+    t2 = {"a": 3 * np.ones(3, np.float32)}
+    agg = fedavg_aggregate([t1, t2], sizes=[1, 3])
+    np.testing.assert_allclose(agg["a"], 2.5 * np.ones(3), rtol=1e-6)
