@@ -1,0 +1,27 @@
+PY      := python
+PYPATH  := PYTHONPATH=src:.
+
+.PHONY: test test-slow bench-smoke bench lint
+
+## tier-1 verification (what CI runs)
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+## includes the slow FL end-to-end / dry-run subprocess tests
+test-slow:
+	PYTHONPATH=src $(PY) -m pytest -q --run-slow
+
+## fast benchmark smoke: kernels + latency figures + engine throughput
+bench-smoke:
+	$(PYPATH) $(PY) benchmarks/run.py --quick --only kernels,roofline,latency
+
+## full paper-figure benchmark sweep (slow)
+bench:
+	$(PYPATH) $(PY) benchmarks/run.py
+
+## syntax check + import smoke (no third-party linters in the container)
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+	PYTHONPATH=src $(PY) -c "import repro, repro.fl, repro.fl.batched, \
+repro.core, repro.kernels, repro.models, repro.launch"
+	@echo lint OK

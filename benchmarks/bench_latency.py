@@ -9,7 +9,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Timer, emit, save_json
+from benchmarks.common import (Timer, emit, measure_engine_throughput,
+                               save_json)
 from repro.fl import BaselineRunner, FLEnvironment, FLSimConfig, HAPFLServer
 
 
@@ -96,6 +97,12 @@ def main(datasets=("mnist", "cifar10", "imagenet10"), warmup: int = 3000,
                  t.seconds * 1e6 / max(eval_rounds, 1),
                  f"reduction={t_red:.1f}%")
         out[ds] = ds_out
+    # sequential vs batched client-training engine at a 10-client cohort
+    # (full grid incl. 50/100 clients lives in bench_scalability)
+    eng = measure_engine_throughput(10, 4, rounds=3, warmup=2, seed=seed)
+    out["engine_throughput_10c_b4"] = {k: round(v, 3) for k, v in eng.items()}
+    emit("engine_throughput_10c_b4", 1e6 / eng["batched"],
+         f"speedup={eng['speedup']:.2f}x_vs_sequential")
     save_json("latency_comparison", out)
     return out
 

@@ -1,14 +1,19 @@
-"""Paper Fig 24: scalability of heterogeneous model allocation.
+"""Paper Fig 24 + engine throughput: scalability in two senses.
 
-Setups (paper §V.C.4): (a) 10 clients / 10x disparity / 2 sizes,
-(b) 20 clients / 20x disparity / 3 sizes, (c) 100 clients / 50x / 3 sizes.
-Metric: straggling-latency reduction vs fixed-intensity FedAvg.
+1. Paper §V.C.4 setups: (a) 10 clients / 10x disparity / 2 sizes,
+   (b) 20 clients / 20x disparity / 3 sizes, (c) 100 clients / 50x / 3 sizes.
+   Metric: straggling-latency reduction vs fixed-intensity FedAvg.
+2. Simulation throughput (ours): sequential vs batched client-training
+   engine, rounds/sec at 10/50/100-client cohorts. The batched engine
+   (repro.fl.batched) wins in the dispatch-bound small-batch regime the
+   IoT simulations live in; see DESIGN.md §9 for the CPU performance model.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Timer, emit, save_json
+from benchmarks.common import (Timer, emit, measure_engine_throughput,
+                               save_json)
 from repro.fl import BaselineRunner, FLEnvironment, FLSimConfig, HAPFLServer
 
 
@@ -30,7 +35,25 @@ def reduction(cfg, warmup, eval_rounds, seed=0):
     return float(100 * (1 - h / np.mean(f)))
 
 
-def main(warmup: int = 4000, eval_rounds: int = 200, seed: int = 0):
+def engine_throughput(cohorts=(10, 50, 100), batch_sizes=(1, 4),
+                      rounds: int = 3, warmup: int = 2, seed: int = 0):
+    """Sequential vs batched engine rounds/sec across cohort sizes."""
+    out = {}
+    for n in cohorts:
+        for b in batch_sizes:
+            r = max(2, rounds - 1) if n >= 100 else rounds
+            res = measure_engine_throughput(n, b, rounds=r, warmup=warmup,
+                                            seed=seed)
+            key = f"{n}c_b{b}"
+            out[key] = {k: round(v, 3) for k, v in res.items()}
+            emit(f"engine_throughput_{key}", 1e6 / res["batched"],
+                 f"speedup={res['speedup']:.2f}x_vs_sequential")
+    save_json("engine_throughput", out)
+    return out
+
+
+def main(warmup: int = 4000, eval_rounds: int = 200, seed: int = 0,
+         engine_rounds: int = 3, engine_cohorts=(10, 50, 100)):
     setups = [
         ("10c_10x_2sizes", FLSimConfig(n_clients=10, k_per_round=6,
                                        max_speed_ratio=10,
@@ -55,6 +78,8 @@ def main(warmup: int = 4000, eval_rounds: int = 200, seed: int = 0):
                      "seconds": round(t.seconds, 1)}
         emit(f"fig24_scalability_{name}", t.seconds * 1e6 / eval_rounds,
              f"straggling_reduction={red:.1f}%")
+    out["engine_throughput"] = engine_throughput(
+        cohorts=engine_cohorts, rounds=engine_rounds, seed=seed)
     save_json("scalability", out)
     return out
 

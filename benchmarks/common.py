@@ -36,3 +36,36 @@ class Timer:
 
     def __exit__(self, *a):
         self.seconds = time.time() - self.t0
+
+
+def measure_engine_throughput(n_clients: int, batch_size: int,
+                              dataset: str = "mnist", epochs: int = 4,
+                              rounds: int = 3, warmup: int = 2,
+                              seed: int = 0):
+    """Steady-state rounds/sec of real training rounds, per engine.
+
+    RL allocation is frozen (use_ppo1/2=False) so both engines train an
+    identical fixed workload, and accuracy evaluation is skipped — this
+    isolates the client-training engine, the thing the batched path changes.
+    Warmup rounds absorb jit compilation. Returns
+    {sequential, batched, speedup} (rounds/sec; speedup = batched/sequential).
+    """
+    from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+    out = {}
+    for engine in ("sequential", "batched"):
+        cfg = FLSimConfig(dataset=dataset, n_clients=n_clients,
+                          k_per_round=n_clients, default_epochs=epochs,
+                          batches_per_epoch=1, batch_size=batch_size,
+                          n_train=max(1200, 30 * n_clients), n_test=100,
+                          seed=seed)
+        env = FLEnvironment(cfg)
+        srv = HAPFLServer(env, seed=seed, engine=engine,
+                          use_ppo1=False, use_ppo2=False)
+        for _ in range(warmup):
+            srv.run_round(eval_accuracy=False)
+        with Timer() as t:
+            for _ in range(rounds):
+                srv.run_round(eval_accuracy=False)
+        out[engine] = rounds / t.seconds
+    out["speedup"] = out["batched"] / out["sequential"]
+    return out

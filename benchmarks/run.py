@@ -66,7 +66,9 @@ def main() -> None:
     if want("scalability"):
         from benchmarks import bench_scalability
         run("scalability", lambda: bench_scalability.main(
-            warmup=300 if q else 4000, eval_rounds=50 if q else 200))
+            warmup=300 if q else 4000, eval_rounds=50 if q else 200,
+            engine_rounds=2 if q else 3,
+            engine_cohorts=(10, 50) if q else (10, 50, 100)))
     if want("ablation"):
         from benchmarks import bench_ablation
         run("ablation", lambda: bench_ablation.main(

@@ -25,7 +25,8 @@ def main():
     env = FLEnvironment(cfg)
     print(f"clients: {cfg.n_clients}, per-round: {cfg.k_per_round}, "
           f"speeds: {[round(p.base_speed, 1) for p in env.profiles]}")
-    srv = HAPFLServer(env, seed=0)
+    srv = HAPFLServer(env, seed=0)   # engine="auto" picks per regime
+    print(f"training engine: {srv.engine}")
 
     print("\n== RL warmup (latency-only, 800 rounds) ==")
     hist = srv.pretrain_rl(800)

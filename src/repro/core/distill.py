@@ -8,7 +8,6 @@ the transformer train_step.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Dict, Tuple
 
 import jax
@@ -49,12 +48,14 @@ def mutual_losses(local_logits, lite_logits, labels,
     return L1 + L2, metrics
 
 
-def make_mutual_train_step(apply_local: Callable, apply_lite: Callable,
-                           lr: float = 3e-4, lambdas=LAMBDAS):
-    """jit'd one-batch mutual-KD SGD step over {local, lite} params (Eq. 35)."""
+def make_mutual_train_fns(apply_local: Callable, apply_lite: Callable,
+                          lr: float = 3e-4, lambdas=LAMBDAS):
+    """Un-jitted one-batch mutual-KD SGD step over {local, lite} params
+    (Eq. 35) + opt init. Composable under jax.vmap / jax.lax.scan — this is
+    the building block of the batched multi-client engine (fl/batched.py);
+    make_mutual_train_step wraps it in jit for the sequential path."""
     opt = sgd(lr, momentum=0.9)
 
-    @jax.jit
     def step(params, opt_state, images, labels):
         def loss_fn(p):
             return mutual_losses(apply_local(p["local"], images),
@@ -66,18 +67,23 @@ def make_mutual_train_step(apply_local: Callable, apply_lite: Callable,
         metrics["loss"] = loss
         return params, opt_state, metrics
 
-    def init_opt(params):
-        return opt.init(params)
-
-    return step, init_opt
+    return step, opt.init
 
 
-def make_single_train_step(apply_fn: Callable, lr: float = 3e-4,
-                           prox_mu: float = 0.0):
-    """Plain CE step (FedAvg/pFedMe clients); prox_mu adds FedProx's term."""
+def make_mutual_train_step(apply_local: Callable, apply_lite: Callable,
+                           lr: float = 3e-4, lambdas=LAMBDAS):
+    """jit'd one-batch mutual-KD SGD step over {local, lite} params (Eq. 35)."""
+    step, init_opt = make_mutual_train_fns(apply_local, apply_lite, lr, lambdas)
+    return jax.jit(step), init_opt
+
+
+def make_single_train_fns(apply_fn: Callable, lr: float = 3e-4,
+                          prox_mu: float = 0.0):
+    """Un-jitted plain-CE step (FedAvg/pFedMe clients) + opt init;
+    prox_mu adds FedProx's proximal term. Scan-composable like
+    make_mutual_train_fns."""
     opt = sgd(lr, momentum=0.9)
 
-    @jax.jit
     def step(params, opt_state, images, labels, global_params):
         def loss_fn(p):
             loss = _ce(apply_fn(p, images), labels)
@@ -91,3 +97,10 @@ def make_single_train_step(apply_fn: Callable, lr: float = 3e-4,
         return tree_add(params, updates), opt_state, {"loss": loss}
 
     return step, opt.init
+
+
+def make_single_train_step(apply_fn: Callable, lr: float = 3e-4,
+                           prox_mu: float = 0.0):
+    """Plain CE step (FedAvg/pFedMe clients); prox_mu adds FedProx's term."""
+    step, init_opt = make_single_train_fns(apply_fn, lr, prox_mu)
+    return jax.jit(step), init_opt

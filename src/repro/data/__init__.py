@@ -1,3 +1,3 @@
 from repro.data.synthetic import make_image_dataset, make_token_dataset
 from repro.data.partition import dirichlet_partition, label_histogram
-from repro.data.pipeline import BatchLoader
+from repro.data.pipeline import BatchLoader, prefetch_client, prefetch_steps

@@ -8,6 +8,7 @@ streams for the transformer substrate.
 """
 from __future__ import annotations
 
+import zlib
 from typing import Dict, Tuple
 
 import numpy as np
@@ -20,7 +21,9 @@ def make_image_dataset(name: str, n_train: int = 6000, n_test: int = 1000,
               "imagenet10": (64, 64, 3)}
     noise = {"mnist": 0.25, "cifar10": 0.55, "imagenet10": 0.75}[name]
     H, W, C = shapes[name]
-    rng = np.random.default_rng(seed + hash(name) % 10000)
+    # crc32, not hash(): str hashes are salted per process, which silently
+    # made "deterministic" datasets differ between runs
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 10000)
     # per-class frequency signatures
     fy = rng.uniform(0.5, 4.0, size=(n_classes, C, 3))
     fx = rng.uniform(0.5, 4.0, size=(n_classes, C, 3))

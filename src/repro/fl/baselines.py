@@ -18,12 +18,15 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import fedavg_aggregate
-from repro.core.distill import make_single_train_step
+from repro.core.distill import make_single_train_fns
 from repro.core.intensity import IntensityAllocator
 from repro.core.latency import straggling_latency
+from repro.data.pipeline import prefetch_client
+from repro.fl.batched import next_pow2, scan_train
 from repro.fl.env import FLEnvironment
 from repro.models.cnn import apply_cnn, init_cnn
 
@@ -47,10 +50,12 @@ class BaselineRunner:
         self.size = size or list(env.pool)[0]
         self.cnn_cfg = env.pool[self.size]
         mu = {"fedprox": prox_mu, "pfedme": 15.0 * cfg.lr}.get(algo, 0.0)
-        self._step, self._init_opt = make_single_train_step(
+        raw_step, init_opt = make_single_train_fns(
             functools.partial(lambda p, x, cc: apply_cnn(p, cc, x),
                               cc=self.cnn_cfg),
             lr=cfg.lr, prox_mu=mu)
+        # one scan dispatch per client instead of one per batch
+        self._scan_train = scan_train(raw_step, init_opt)
         key = jax.random.PRNGKey(seed)
         self.global_params = init_cnn(key, self.cnn_cfg)
         self.personal = {i: self.global_params
@@ -65,14 +70,16 @@ class BaselineRunner:
 
     def _train_client(self, client: int, epochs: int, start_params):
         env = self.env
-        params = start_params
-        opt_state = self._init_opt(params)
-        for _ in range(epochs):
-            for _ in range(env.cfg.batches_per_epoch):
-                x, y = env.loaders[client].sample()
-                params, opt_state, _ = self._step(params, opt_state, x, y,
-                                                  self.global_params)
-        return params
+        n_steps = epochs * env.cfg.batches_per_epoch
+        # pow2 padding + masking keeps fedddrl's varying intensities from
+        # forcing a recompile per distinct step count; the other baselines
+        # train a constant epoch count, so padding would only waste compute
+        pad = next_pow2(n_steps) if self.algo == "fedddrl" else n_steps
+        xs, ys, mask = prefetch_client(env.loaders[client], n_steps,
+                                       pad_to=pad)
+        return self._scan_train(start_params, jnp.asarray(xs),
+                                jnp.asarray(ys), jnp.asarray(mask),
+                                self.global_params)
 
     def run_round(self) -> BaselineRecord:
         env, cfg = self.env, self.env.cfg

@@ -15,7 +15,7 @@ import numpy as np
 from repro.core.latency import LatencyModel, make_heterogeneous_clients
 from repro.core.aggregation import information_entropy
 from repro.data import (BatchLoader, dirichlet_partition, label_histogram,
-                        make_image_dataset)
+                        make_image_dataset, prefetch_steps)
 from repro.models.cnn import CNNConfig, apply_cnn, cnn_pool, init_cnn
 
 
@@ -69,6 +69,15 @@ class FLEnvironment:
         self.rng = np.random.default_rng(cfg.seed + 99)
 
     # ------------------------------------------------------------------ #
+    def prefetch_round(self, clients: Sequence[int],
+                       steps_per_client: Sequence[int], pad_to: int = None,
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Pre-sample each listed client's step batches into stacked
+        (clients, steps, ...) arrays + step mask (the batched engine's data
+        path). Advances each loader's rng exactly as per-step sampling would."""
+        return prefetch_steps(self.loaders, clients, steps_per_client,
+                              pad_to=pad_to)
+
     def select_clients(self) -> List[int]:
         return sorted(self.rng.choice(self.cfg.n_clients,
                                       size=self.cfg.k_per_round,

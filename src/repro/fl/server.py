@@ -20,6 +20,7 @@ from repro.core.aggregation import (aggregation_weights, fedavg_aggregate,
 from repro.core.distill import make_mutual_train_step
 from repro.core.intensity import IntensityAllocator
 from repro.core.latency import straggling_latency
+from repro.fl.batched import BatchedClientEngine
 from repro.fl.env import FLEnvironment
 from repro.models.cnn import apply_cnn, init_cnn
 
@@ -39,16 +40,28 @@ class RoundRecord:
     acc_lite: float
     acc_by_size: Dict[str, float]
     client_acc: Dict[int, Dict[str, float]]
+    latency_only: bool = False
 
 
 class HAPFLServer:
     def __init__(self, env: FLEnvironment, seed: int = 0,
                  use_ppo1: bool = True, use_ppo2: bool = True,
                  weighted_agg: bool = True,
-                 lr_ppo1: float = 2e-3, lr_ppo2: float = 3e-4):
+                 lr_ppo1: float = 2e-3, lr_ppo2: float = 3e-4,
+                 engine: str = "auto"):
         # paper Table II: lr1=0.02 — unstable for Adam on our tiny actor
         # (PPO1 reward degrades); 2e-3 learns cleanly (DESIGN.md §8).
+        if engine not in ("auto", "batched", "sequential"):
+            raise ValueError(f"unknown engine {engine!r}")
+        if engine == "auto":
+            # batching wins when per-step compute is small (dispatch-bound
+            # small batches) or the backend has parallel hardware; at large
+            # CPU batches the conv arithmetic floor dominates and the
+            # sequential path's plain convs are faster (DESIGN.md §9)
+            engine = ("batched" if env.cfg.batch_size <= 8
+                      or jax.default_backend() != "cpu" else "sequential")
         self.env = env
+        self.engine = engine
         cfg = env.cfg
         self.use_ppo1, self.use_ppo2 = use_ppo1, use_ppo2
         self.weighted_agg = weighted_agg
@@ -65,7 +78,7 @@ class HAPFLServer:
         self.global_by_size = {
             s: init_cnn(jax.random.fold_in(k3, i), c)
             for i, (s, c) in enumerate(env.pool.items())}
-        # jitted mutual train steps per size
+        # jitted mutual train steps per size (sequential engine)
         self._steps = {}
         for s, c in env.pool.items():
             step, init_opt = make_mutual_train_step(
@@ -74,25 +87,25 @@ class HAPFLServer:
                                   cc=env.lite_cfg),
                 lr=cfg.lr)
             self._steps[s] = (step, init_opt)
+        # batched engine: one vmap+scan dispatch per size group per round
+        self.batched_engine = (BatchedClientEngine(env, lr=cfg.lr)
+                               if engine == "batched" else None)
         self.history: List[RoundRecord] = []
         self._round = 0
 
     # ------------------------------------------------------------------ #
     def _client_train(self, client: int, size: str, intensity: int):
+        """Sequential reference engine: one jitted dispatch per batch.
+        Kept for equivalence testing against the batched engine."""
         env = self.env
         step, init_opt = self._steps[size]
         params = {"local": self.global_by_size[size], "lite": self.lite_params}
         opt_state = init_opt(params)
-        metrics = {}
         for _ in range(intensity):
             for _ in range(env.cfg.batches_per_epoch):
                 x, y = env.loaders[client].sample()
-                params, opt_state, metrics = step(params, opt_state, x, y)
-        acc_local = env.client_test_accuracy(params["local"], env.pool[size],
-                                             client)
-        acc_lite = env.client_test_accuracy(params["lite"], env.lite_cfg,
-                                            client)
-        return params, acc_local, acc_lite
+                params, opt_state, _ = step(params, opt_state, x, y)
+        return params
 
     def pretrain_rl(self, rounds: int) -> List[Dict[str, float]]:
         """Latency-only rounds to train the PPO agents (Algorithm 1 runs
@@ -107,7 +120,11 @@ class HAPFLServer:
         return out
 
     def run_round(self, latency_only: bool = False,
-                  deterministic: bool = False) -> RoundRecord:
+                  deterministic: bool = False,
+                  eval_accuracy: bool = True) -> RoundRecord:
+        """One Algorithm-1 round. eval_accuracy=False skips the global and
+        per-client test-set evaluations (throughput benchmarking knob;
+        aggregation then weights by entropy + uniform accuracy)."""
         env, cfg = self.env, self.env.cfg
         r = self._round
         clients = env.select_clients()
@@ -129,18 +146,31 @@ class HAPFLServer:
         else:
             intensities = [cfg.default_epochs] * len(clients)
         # 4. local mutual-KD training (real) + latency (simulated)
-        local_times, client_params, accs_local, accs_lite = [], [], [], []
-        for c, s, tau in zip(clients, sizes, intensities):
-            t_l = env.latency.local_train_time(env.profiles[c], r, s, tau)
-            local_times.append(t_l)
-            if latency_only:
-                accs_local.append(0.0)
-                accs_lite.append(0.0)
-                continue
-            p, a_loc, a_lit = self._client_train(c, s, tau)
-            client_params.append(p)
-            accs_local.append(a_loc)
-            accs_lite.append(a_lit)
+        local_times = [env.latency.local_train_time(env.profiles[c], r, s, tau)
+                       for c, s, tau in zip(clients, sizes, intensities)]
+        client_params: List[Dict] = []
+        if latency_only:
+            accs_local = [0.0] * len(clients)
+            accs_lite = [0.0] * len(clients)
+        else:
+            if self.engine == "batched":
+                client_params = self.batched_engine.train_cohort(
+                    clients, sizes, intensities, self.global_by_size,
+                    self.lite_params)
+            else:
+                client_params = [
+                    self._client_train(c, s, tau)
+                    for c, s, tau in zip(clients, sizes, intensities)]
+            if eval_accuracy:
+                accs_local = [
+                    env.client_test_accuracy(p["local"], env.pool[s], c)
+                    for p, s, c in zip(client_params, sizes, clients)]
+                accs_lite = [
+                    env.client_test_accuracy(p["lite"], env.lite_cfg, c)
+                    for p, c in zip(client_params, clients)]
+            else:
+                accs_local = [0.0] * len(clients)
+                accs_lite = [0.0] * len(clients)
         # 5. aggregation
         entropies = [env.entropies[c] for c in clients]
         if latency_only:
@@ -164,21 +194,23 @@ class HAPFLServer:
         rw2 = self.intensity.feedback(local_times) if self.use_ppo2 else 0.0
         # 7. bookkeeping
         wall = max(a + t for a, t in zip(assess, local_times))
+        skip_eval = latency_only or not eval_accuracy
         rec = RoundRecord(
             round_idx=r, clients=clients, sizes=sizes,
             intensities=[int(i) for i in intensities],
             assess_times=assess, local_times=local_times,
             straggling=straggling_latency(local_times), wall_time=wall,
             reward_ppo1=rw1, reward_ppo2=rw2,
-            acc_lite=(0.0 if latency_only else
+            acc_lite=(0.0 if skip_eval else
                       env.test_accuracy(self.lite_params, env.lite_cfg)),
-            acc_by_size=({s: 0.0 for s in env.pool} if latency_only else
+            acc_by_size=({s: 0.0 for s in env.pool} if skip_eval else
                          {s: env.test_accuracy(self.global_by_size[s],
                                                env.pool[s])
                           for s in env.pool}),
             client_acc={c: {"local": accs_local[i], "lite": accs_lite[i],
                             "size": sizes[i]}
                         for i, c in enumerate(clients)},
+            latency_only=latency_only,
         )
         self.history.append(rec)
         self._round += 1
@@ -195,7 +227,10 @@ class HAPFLServer:
 
     # ------------------------------------------------------------------ #
     def summary(self) -> Dict[str, float]:
-        h = self.history
+        # latency_only pretraining rounds train no models and would inflate
+        # total_time / skew the warmup trim — stats cover real rounds only
+        # (fall back to the full history when only pretraining has run).
+        h = [r for r in self.history if not r.latency_only] or self.history
         warm = h[len(h) // 3:] or h   # skip RL warmup for latency stats
         return {
             "mean_straggling": float(np.mean([r.straggling for r in warm])),

@@ -39,10 +39,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_len,
 
     def body(ki, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.ds(ki * block_k, block_k), slice(None))
-                    ).astype(jnp.float32)                   # (block_k, hd)
-        v = pl.load(v_ref, (0, pl.ds(ki * block_k, block_k), slice(None))
-                    ).astype(jnp.float32)
+        k = k_ref[0, pl.ds(ki * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(ki * block_k, block_k), :].astype(jnp.float32)
         s = q @ k.T                                         # (block_q, block_k)
         k_pos = ki * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1)

@@ -81,3 +81,41 @@ def apply_cnn(params, cfg: CNNConfig, images: jnp.ndarray) -> jnp.ndarray:
     x = x.reshape(x.shape[0], -1)
     x = jax.nn.relu(x @ params["fc1"] + params["fc1_b"])
     return x @ params["fc2"] + params["fc2_b"]
+
+
+def _maxpool2x2_slice(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2/2 max-pool as strided slices + maximum. Same values as
+    reduce_window (VALID drops trailing odd rows/cols, hence the crop), but
+    its backward is where/pad instead of XLA's select-and-scatter, which is
+    serial (slow) on CPU."""
+    x = x[:, :x.shape[1] // 2 * 2, :x.shape[2] // 2 * 2]
+    return jnp.maximum(jnp.maximum(x[:, 0::2, 0::2], x[:, 1::2, 0::2]),
+                       jnp.maximum(x[:, 0::2, 1::2], x[:, 1::2, 1::2]))
+
+
+def _conv3x3_im2col(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """SAME 3x3 conv as im2col + one matmul. Under vmap-over-clients the
+    matmul becomes an efficient batched GEMM, whereas a vmapped lax.conv
+    lowers to batch_group_count convolution that XLA CPU runs naively."""
+    B, H, W, Ci = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    pat = jnp.concatenate([xp[:, i:i + H, j:j + W, :]
+                           for i in range(3) for j in range(3)], -1)
+    out = pat.reshape(B * H * W, 9 * Ci) @ w.reshape(9 * Ci, -1)
+    return out.reshape(B, H, W, -1)
+
+
+def apply_cnn_fast(params, cfg: CNNConfig, images: jnp.ndarray) -> jnp.ndarray:
+    """apply_cnn computed via im2col matmuls + slice-based pooling.
+
+    Numerically equivalent to apply_cnn (the reduction order matches; the
+    parity tests in tests/test_batched.py cover it end to end) but vmaps
+    efficiently over per-client parameter stacks — this is the apply path
+    of the batched multi-client engine.
+    """
+    x = images.astype(jnp.float32)
+    for w, b in zip(params["conv"], params["conv_b"]):
+        x = _maxpool2x2_slice(jax.nn.relu(_conv3x3_im2col(x, w) + b))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"] + params["fc1_b"])
+    return x @ params["fc2"] + params["fc2_b"]

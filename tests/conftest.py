@@ -8,6 +8,11 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: slow tests (dry-run subprocesses, FL e2e)")
+
+
 def pytest_addoption(parser):
     parser.addoption("--run-slow", action="store_true", default=False,
                      help="run slow tests (dry-run subprocesses, FL e2e)")

@@ -55,6 +55,17 @@ def test_rl_warmup_reduces_straggling(env):
     assert late < 0.8 * early, (early, late)
 
 
+def test_summary_excludes_latency_only_rounds(env):
+    """latency_only pretraining rounds must not inflate total_time or feed
+    the warmup trim — summary() covers real training rounds only."""
+    srv = HAPFLServer(env, seed=0)
+    srv.pretrain_rl(3)
+    rec = srv.run_round()
+    s = srv.summary()
+    assert s["total_time"] == pytest.approx(rec.wall_time)
+    assert s["mean_straggling"] == pytest.approx(rec.straggling)
+
+
 def test_intensity_total_respected(env):
     srv = HAPFLServer(env, seed=0)
     rec = srv.run_round(latency_only=True)

@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.aggregation import (aggregation_weights, fedavg_aggregate,

@@ -13,8 +13,10 @@ def test_end_to_end_hapfl_learns_and_schedules():
     env = FLEnvironment(cfg)
     srv = HAPFLServer(env, seed=0)
     srv.pretrain_rl(200)           # warm the PPO agents (latency-only)
-    recs = srv.run(4)
-    accs = [r.acc_by_size["large"] for r in recs]
+    # 6 rounds: datasets are now process-independent (crc32-seeded, not
+    # salted hash()), and this fixed realization needs the extra rounds to
+    # clear the better-than-chance bar with margin
+    recs = srv.run(6)
     assert recs[-1].acc_lite > 0.15          # better than chance (10 classes)
     sizes_seen = {s for r in recs for s in r.sizes}
     assert len(sizes_seen) >= 1
