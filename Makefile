@@ -23,5 +23,5 @@ bench:
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
 	PYTHONPATH=src $(PY) -c "import repro, repro.fl, repro.fl.batched, \
-repro.core, repro.kernels, repro.models, repro.launch"
+repro.core, repro.kernels, repro.models, repro.launch, repro.sim"
 	@echo lint OK

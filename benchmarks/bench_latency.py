@@ -4,6 +4,11 @@ training time, HAPFL vs FedAvg / FedProx / pFedMe / FedDdrl.
 Latency metrics come from the analytic latency model, which is what the RL
 optimizes, so these comparisons run latency-only (fast) after RL warmup —
 the model-accuracy side lives in bench_accuracy.
+
+Also here: the event-driven scheduling-policy comparison
+(sync/deadline/buffered/async, DESIGN.md §10) — per-policy straggling and
+simulated time-to-target-accuracy with real training, emitted to
+artifacts/bench/async_modes.json.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import numpy as np
 from benchmarks.common import (Timer, emit, measure_engine_throughput,
                                save_json)
 from repro.fl import BaselineRunner, FLEnvironment, FLSimConfig, HAPFLServer
+from repro.sim import EventScheduler, make_policy
 
 
 def run_hapfl(cfg, warmup, eval_rounds, seed=0, **flags):
@@ -26,39 +32,59 @@ def run_hapfl(cfg, warmup, eval_rounds, seed=0, **flags):
 def run_baseline(cfg, algo, eval_rounds, seed=0, size=None):
     env = FLEnvironment(cfg)
     runner = BaselineRunner(env, algo, seed=seed, size=size)
-    # pFedMe/FedProx/FedAvg latency doesn't depend on CNN training; emulate
-    # the round structure latency-only by reusing the latency bookkeeping.
-    stragg, wall = [], []
-    for _ in range(eval_rounds):
-        clients = env.select_clients()
-        r = runner._round
-        assess = [env.latency.assessment_time(env.profiles[c], r)
-                  for c in clients]
-        if algo == "fedddrl":
-            import jax
-            runner.key, k = jax.random.split(runner.key)
-            intensities, _ = runner.intensity.assign(
-                k, (np.asarray(assess) / min(assess)).tolist())
-            t_pred = [env.latency.local_train_time(
-                env.profiles[c], r, runner.size, e, include_lite=False)
-                for c, e in zip(clients, intensities)]
-            worst = int(np.argmax(t_pred))
-            intensities[worst] = max(1, intensities[worst] // 2)
-        else:
-            intensities = [cfg.default_epochs] * len(clients)
-        times = [env.latency.local_train_time(env.profiles[c], r, runner.size,
-                                              e, include_lite=False)
-                 for c, e in zip(clients, intensities)]
-        if algo == "fedddrl":
-            runner.intensity.feedback(times)
-        stragg.append(max(times) - min(times))
-        wall.append(max(a + t for a, t in zip(assess, times)))
-        runner._round += 1
-    return np.mean(stragg), np.sum(wall)
+    # pFedMe/FedProx/FedAvg latency doesn't depend on CNN training; run
+    # the round structure latency-only (scheduling + bookkeeping only).
+    recs = [runner.run_round(latency_only=True) for _ in range(eval_rounds)]
+    return (np.mean([r.straggling for r in recs]),
+            np.sum([r.wall_time for r in recs]))
+
+
+POLICIES = ({"name": "sync"}, {"name": "deadline", "quantile": 0.6},
+            {"name": "buffered", "buffer_m": 3}, {"name": "async"})
+
+
+def run_policy_comparison(max_updates: int = 150, target_acc: float = 0.4,
+                          seed: int = 0, eval_every: int = 1,
+                          policies=POLICIES):
+    """Event-driven scheduling-policy comparison under a 10x speed-ratio
+    cohort: per-policy straggling + simulated time-to-target-accuracy,
+    with real mutual-KD training (RL frozen so every policy schedules an
+    identical fixed workload and only the aggregation timing differs).
+    Budget is total client-updates consumed, the apples-to-apples unit —
+    a sync round spends k at once, async spends them one at a time."""
+    out = {}
+    for spec in policies:
+        spec = dict(spec)
+        pol = make_policy(spec.pop("name"), **spec)
+        cfg = FLSimConfig(dataset="mnist", n_train=800, n_test=200,
+                          batches_per_epoch=2, default_epochs=8, lr=2e-2,
+                          batch_size=8, max_speed_ratio=10.0, seed=seed)
+        env = FLEnvironment(cfg)
+        srv = HAPFLServer(env, seed=seed, use_ppo1=False, use_ppo2=False)
+        sched = EventScheduler(srv, pol, eval_every=eval_every)
+        with Timer() as t:
+            res = sched.run(waves=None, max_updates=max_updates,
+                            target_accuracy=target_acc)
+        row = res.summary()
+        row["target_acc"] = target_acc
+        row["wall_seconds"] = round(t.seconds, 1)
+        out[pol.name] = row
+    base = out.get("sync", {}).get("time_to_target")
+    for name, row in out.items():
+        ttt = row.get("time_to_target")
+        row["speedup_vs_sync"] = (round(base / ttt, 2)
+                                  if base and ttt else None)
+        emit(f"async_mode_{name}",
+             row["wall_seconds"] * 1e6 / max(row["n_aggregations"], 1),
+             f"straggling={row['mean_straggling']:.2f}"
+             f"_ttt={row['time_to_target']}")
+    save_json("async_modes", out)
+    return out
 
 
 def main(datasets=("mnist", "cifar10", "imagenet10"), warmup: int = 3000,
-         eval_rounds: int = 200, seed: int = 0, baseline_size: str = "large"):
+         eval_rounds: int = 200, seed: int = 0, baseline_size: str = "large",
+         mode_updates: int = 150):
     """baseline_size='large': the baselines' uniform global model is the full
     architecture (the paper's FedAvg has no small variants — HAPFL is what
     introduces them). The conservative small-model baseline is also recorded
@@ -103,6 +129,9 @@ def main(datasets=("mnist", "cifar10", "imagenet10"), warmup: int = 3000,
     out["engine_throughput_10c_b4"] = {k: round(v, 3) for k, v in eng.items()}
     emit("engine_throughput_10c_b4", 1e6 / eng["batched"],
          f"speedup={eng['speedup']:.2f}x_vs_sequential")
+    # event-driven scheduling policies: straggling + time-to-target-accuracy
+    out["async_modes"] = run_policy_comparison(max_updates=mode_updates,
+                                               seed=seed)
     save_json("latency_comparison", out)
     return out
 

@@ -15,6 +15,7 @@ import numpy as np
 from benchmarks.common import (Timer, emit, measure_engine_throughput,
                                save_json)
 from repro.fl import BaselineRunner, FLEnvironment, FLSimConfig, HAPFLServer
+from repro.sim import EventScheduler, make_policy
 
 
 def reduction(cfg, warmup, eval_rounds, seed=0):
@@ -52,6 +53,25 @@ def engine_throughput(cohorts=(10, 50, 100), batch_sizes=(1, 4),
     return out
 
 
+def policy_straggling(cfg, updates: int, seed: int = 0):
+    """Latency-only per-scheduling-mode straggling at one paper setup —
+    pure event dynamics, no CNN training, so it scales to 100 clients."""
+    out = {}
+    for name, kw in (("sync", {}), ("deadline", {"quantile": 0.6}),
+                     ("buffered", {"buffer_m": max(2, cfg.k_per_round // 2)}),
+                     ("async", {})):
+        env = FLEnvironment(cfg)
+        srv = HAPFLServer(env, seed=seed, use_ppo1=False, use_ppo2=False)
+        sched = EventScheduler(srv, make_policy(name, **kw),
+                               latency_only=True)
+        res = sched.run(waves=None, max_updates=updates)
+        out[name] = {"mean_straggling": round(res.mean_straggling, 3),
+                     "sim_time": round(float(res.sim_time), 2),
+                     "n_updates": res.n_updates,
+                     "n_dropped": res.n_dropped}
+    return out
+
+
 def main(warmup: int = 4000, eval_rounds: int = 200, seed: int = 0,
          engine_rounds: int = 3, engine_cohorts=(10, 50, 100)):
     setups = [
@@ -78,6 +98,14 @@ def main(warmup: int = 4000, eval_rounds: int = 200, seed: int = 0,
                      "seconds": round(t.seconds, 1)}
         emit(f"fig24_scalability_{name}", t.seconds * 1e6 / eval_rounds,
              f"straggling_reduction={red:.1f}%")
+        with Timer() as tm:
+            modes = policy_straggling(cfg,
+                                      updates=eval_rounds * cfg.k_per_round,
+                                      seed=seed)
+        out[name]["async_modes"] = modes
+        emit(f"async_modes_{name}", tm.seconds * 1e6 / eval_rounds,
+             "straggling_" + "_".join(
+                 f"{m}={v['mean_straggling']:.1f}" for m, v in modes.items()))
     out["engine_throughput"] = engine_throughput(
         cohorts=engine_cohorts, rounds=engine_rounds, seed=seed)
     save_json("scalability", out)

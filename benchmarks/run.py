@@ -54,7 +54,8 @@ def main() -> None:
         from benchmarks import bench_latency
         run("latency", lambda: bench_latency.main(
             datasets=("mnist",) if q else ("mnist", "cifar10", "imagenet10"),
-            warmup=300 if q else 2000, eval_rounds=50 if q else 200))
+            warmup=300 if q else 2000, eval_rounds=50 if q else 200,
+            mode_updates=72 if q else 150))
     if want("accuracy"):
         from benchmarks import bench_accuracy
         for ds in args.datasets.split(","):

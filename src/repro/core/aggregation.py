@@ -9,7 +9,7 @@ W-weighted average when sum W = 1 (it does, by construction).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -39,15 +39,43 @@ def aggregation_weights(entropies: Sequence[float],
                   + _softmax(np.asarray(accuracies)))
 
 
+def staleness_discount(staleness: Sequence[int],
+                       exponent: float = 0.5) -> np.ndarray:
+    """FedBuff-style polynomial staleness discount s(tau) = (1+tau)^-a.
+
+    tau counts server aggregations between an update's dispatch version and
+    its arrival; a fresh update (tau=0) is undiscounted.
+    """
+    return (1.0 + np.asarray(staleness, np.float64)) ** -float(exponent)
+
+
+def staleness_weights(entropies: Sequence[float], accuracies: Sequence[float],
+                      staleness: Optional[Sequence[int]] = None,
+                      exponent: float = 0.5) -> np.ndarray:
+    """Eq. 38 weights, staleness-discounted and renormalized (DESIGN.md
+    §10). staleness=None applies no discount and returns Eq. 38 exactly, so
+    the synchronous path is byte-identical to the legacy weights."""
+    w = aggregation_weights(entropies, accuracies)
+    if staleness is None:
+        return w
+    w = w * staleness_discount(staleness, exponent)
+    return w / w.sum()
+
+
 def weighted_aggregate(global_params, client_params: List,
-                       weights: Sequence[float]):
-    """Eq. 39 (delta form): theta + sum W_i (theta_i - theta)."""
+                       weights: Sequence[float], mix: float = 1.0):
+    """Eq. 39 (delta form): theta + mix * sum W_i (theta_i - theta).
+
+    mix=1 is the paper's full weighted average. mix<1 is the server mixing
+    rate used by the async apply-on-arrival policy (a single normalized
+    update would otherwise fully replace the global model)."""
     w = np.asarray(weights, np.float64)
     w = w / w.sum()
     avg = tree_weighted_sum(client_params, list(w.astype(np.float32)))
     import jax
+    mix = float(mix)
     return jax.tree_util.tree_map(
-        lambda g, a: (g + (a - g)).astype(g.dtype), global_params, avg)
+        lambda g, a: (g + mix * (a - g)).astype(g.dtype), global_params, avg)
 
 
 def fedavg_aggregate(client_params: List, sizes: Sequence[int] = None):
@@ -64,13 +92,20 @@ def fedavg_aggregate(client_params: List, sizes: Sequence[int] = None):
 def group_aggregate(global_by_size: Dict[str, object],
                     client_params: List, client_sizes: List[str],
                     entropies: Sequence[float], accuracies: Sequence[float],
+                    staleness: Optional[Sequence[int]] = None,
+                    staleness_exponent: float = 0.5, mix: float = 1.0,
                     ) -> Dict[str, object]:
-    """Eq. 5 + Eq. 38-39: aggregate same-sized local models per group."""
+    """Eq. 5 + Eq. 38-39: aggregate same-sized local models per group,
+    optionally staleness-discounted (semi-async buffers mix waves whose
+    updates trained against different global versions)."""
     out = dict(global_by_size)
     for size in set(client_sizes):
         idx = [i for i, s in enumerate(client_sizes) if s == size]
-        w = aggregation_weights([entropies[i] for i in idx],
-                                [accuracies[i] for i in idx])
+        w = staleness_weights(
+            [entropies[i] for i in idx], [accuracies[i] for i in idx],
+            None if staleness is None else [staleness[i] for i in idx],
+            staleness_exponent)
         out[size] = weighted_aggregate(global_by_size[size],
-                                       [client_params[i] for i in idx], w)
+                                       [client_params[i] for i in idx], w,
+                                       mix=mix)
     return out

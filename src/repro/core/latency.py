@@ -4,13 +4,55 @@ The paper simulates heterogeneous clients on one server; we do the same with
 an analytic model: per-epoch time = dataset_size * model_cost / speed, with
 a time-varying speed (slow sinusoidal drift + lognormal jitter) so the RL
 agents face a *dynamic* environment (paper §IV.B). All times are seconds.
+
+Jitter is **counter-based**: a pure function of (seed, client_id, round_idx),
+never a shared generator. The event-driven scheduler (repro.sim) queries
+client latencies in arrival order, not cohort order, so a shared-stream
+draw would make the simulated environment depend on the scheduling policy;
+counter-based draws make sync and event-driven runs byte-identical.
+
+Also here: the communication model (upload/download time = payload bytes /
+per-client bandwidth) and on/off availability traces used by the
+event-driven simulator (DESIGN.md §10).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+_M64 = (1 << 64) - 1
+
+
+def _splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & _M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _M64
+    return x ^ (x >> 31)
+
+
+def _counter_normal(*entropy: int) -> float:
+    """Standard-normal draw keyed purely by the given integers (splitmix64
+    avalanche + Box-Muller) — the same value no matter when or in what
+    order it is queried, at ~1us/draw (a numpy Generator construction per
+    draw costs ~60us, which dominates latency-only RL warmups)."""
+    x = 0
+    for e in entropy:
+        x = _splitmix64(x ^ (int(e) & _M64))
+    u1 = max((_splitmix64(x) >> 11) / float(1 << 53), 1e-12)
+    u2 = (_splitmix64(x + 1) >> 11) / float(1 << 53)
+    return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+
+def _counter_rng(*entropy: int) -> np.random.Generator:
+    """A fresh Generator keyed purely by the given integers — the same
+    stream no matter when or in what order it is created. Used where the
+    construction cost is amortized over a whole lazily-extended stream
+    (availability traces), not per draw."""
+    return np.random.default_rng(
+        np.random.SeedSequence([int(e) & 0xFFFFFFFF for e in entropy]))
 
 
 @dataclass
@@ -22,10 +64,12 @@ class ClientProfile:
     drift_period: float = 50.0
     jitter_sigma: float = 0.05 # per-round lognormal noise
 
-    def speed_at(self, round_idx: int, rng: np.random.Generator) -> float:
+    def speed_at(self, round_idx: int, seed: int = 0) -> float:
         drift = 1.0 + self.drift_amp * np.sin(
             2 * np.pi * round_idx / self.drift_period + self.client_id)
-        jitter = rng.lognormal(0.0, self.jitter_sigma)
+        # lognormal(0, sigma) = exp(sigma * N(0, 1)), counter-keyed
+        jitter = math.exp(self.jitter_sigma * _counter_normal(
+            seed, self.client_id, round_idx))
         return self.base_speed * max(drift, 0.05) * jitter
 
 
@@ -41,7 +85,12 @@ def make_heterogeneous_clients(n_clients: int, max_speed_ratio: float,
 
 
 class LatencyModel:
-    """Computes T^d (assessment), T^l (local training) per Eqs. 7-10."""
+    """Computes T^d (assessment), T^l (local training) per Eqs. 7-10.
+
+    All queries are idempotent pure functions of (client, round): the same
+    (client, round) pair always yields the same time, regardless of how
+    often or in what order the scheduler asks.
+    """
 
     def __init__(self, model_costs: Dict[str, float], lite_cost: float,
                  cost_scale: float = 1e-6, seed: int = 0):
@@ -49,11 +98,11 @@ class LatencyModel:
         self.model_costs = dict(model_costs)
         self.lite_cost = float(lite_cost)
         self.cost_scale = cost_scale
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
 
     def assessment_time(self, profile: ClientProfile, round_idx: int) -> float:
         """T^d: one LiteModel epoch (paper §IV.B)."""
-        speed = profile.speed_at(round_idx, self.rng)
+        speed = profile.speed_at(round_idx, self.seed)
         return profile.dataset_size * self.lite_cost * self.cost_scale / speed
 
     def local_train_time(self, profile: ClientProfile, round_idx: int,
@@ -62,7 +111,7 @@ class LatencyModel:
         """T^l: `intensity` local iterations of (local model [+ LiteModel])
         mutual-learning training (Eq. 9-10). Baselines without a LiteModel
         pass include_lite=False."""
-        speed = profile.speed_at(round_idx, self.rng)
+        speed = profile.speed_at(round_idx, self.seed)
         cost = self.model_costs[size_name] + (self.lite_cost if include_lite
                                               else 0.0)
         per_epoch = profile.dataset_size * cost * self.cost_scale / speed
@@ -74,5 +123,105 @@ class LatencyModel:
 
 
 def straggling_latency(times: Sequence[float]) -> float:
-    """Eq. 8: max - min over participating clients."""
+    """Eq. 8: max - min over participating clients. Completion sets of 0 or
+    1 clients (deadline drops, async apply-on-arrival) have no spread."""
+    if len(times) < 2:
+        return 0.0
     return float(max(times) - min(times))
+
+
+# --------------------------------------------------------------------- #
+# communication + availability (event-driven simulator, DESIGN.md §10)
+# --------------------------------------------------------------------- #
+@dataclass
+class CommModel:
+    """Up/down link times: payload bytes / per-client bandwidth (bytes/s).
+
+    The payload a HAPFL client moves each round is its size-category local
+    model plus the LiteModel (mutual KD ships both); baselines without a
+    LiteModel pass include_lite=False.
+    """
+    model_bytes: Dict[str, float]
+    lite_bytes: float
+    up_bw: List[float]
+    down_bw: List[float]
+
+    def payload_bytes(self, size_name: str, include_lite: bool = True) -> float:
+        return self.model_bytes[size_name] + (self.lite_bytes if include_lite
+                                              else 0.0)
+
+    def upload_time(self, client: int, size_name: str,
+                    include_lite: bool = True) -> float:
+        return self.payload_bytes(size_name, include_lite) / self.up_bw[client]
+
+    def download_time(self, client: int, size_name: str,
+                      include_lite: bool = True) -> float:
+        return self.payload_bytes(size_name,
+                                  include_lite) / self.down_bw[client]
+
+
+def make_comm_model(model_params: Dict[str, float], lite_params: float,
+                    n_clients: int, mean_mbps: float = 20.0,
+                    bw_ratio: float = 10.0, down_up_ratio: float = 4.0,
+                    bytes_per_param: float = 4.0, seed: int = 0) -> CommModel:
+    """Uplinks log-spaced across `bw_ratio` (mirroring the compute-speed
+    disparity), shuffled independently of compute speed; downlinks are
+    `down_up_ratio` faster (typical asymmetric last-mile links)."""
+    rng = np.random.default_rng(seed + 1013)
+    up = np.geomspace(1.0, bw_ratio, n_clients)
+    rng.shuffle(up)
+    up = up * (mean_mbps * 1e6 / 8.0) / up.mean()   # bytes/sec, given mean
+    return CommModel(
+        model_bytes={s: p * bytes_per_param for s, p in model_params.items()},
+        lite_bytes=lite_params * bytes_per_param,
+        up_bw=[float(b) for b in up],
+        down_bw=[float(b * down_up_ratio) for b in up])
+
+
+class AvailabilityModel:
+    """Per-client on/off availability traces: alternating exponential
+    on/off durations, generated lazily from a per-client counter-based
+    stream — query order can never change a trace. All clients start
+    online; transition k (0-based) at `_times[c][k]` flips on->off when k
+    is even, off->on when odd.
+    """
+
+    def __init__(self, n_clients: int, mean_on: float = 600.0,
+                 mean_off: float = 120.0, seed: int = 0):
+        self.n_clients = n_clients
+        self.mean_on = float(mean_on)
+        self.mean_off = float(mean_off)
+        self.seed = seed
+        self._rngs = [_counter_rng(seed, c, 0xA5A11AB) for c in range(n_clients)]
+        self._times: List[List[float]] = [[] for _ in range(n_clients)]
+
+    def _extend(self, client: int, until: float) -> List[float]:
+        ts = self._times[client]
+        rng = self._rngs[client]
+        while not ts or ts[-1] <= until:
+            mean = self.mean_on if len(ts) % 2 == 0 else self.mean_off
+            prev = ts[-1] if ts else 0.0
+            ts.append(prev + float(rng.exponential(mean)))
+        return ts
+
+    def available(self, client: int, t: float) -> bool:
+        ts = self._extend(client, t)
+        return int(np.searchsorted(ts, t, side="right")) % 2 == 0
+
+    def next_offline(self, client: int, t0: float, t1: float,
+                     ) -> Optional[float]:
+        """First on->off transition in (t0, t1), or None — the dropout time
+        of a client dispatched at t0 and due back at t1. The interval is
+        open at t1: a client that finishes the instant it would go offline
+        delivers its update (the ARRIVAL-beats-DROPOUT tie-break)."""
+        ts = self._extend(client, t1)
+        k = int(np.searchsorted(ts, t0, side="right"))
+        if k % 2 == 1:               # already offline at t0
+            return t0
+        return ts[k] if ts[k] < t1 else None
+
+    def next_online(self, client: int, t: float) -> float:
+        """Earliest time >= t at which the client is available."""
+        ts = self._extend(client, t)
+        k = int(np.searchsorted(ts, t, side="right"))
+        return t if k % 2 == 0 else ts[k]

@@ -38,6 +38,7 @@ class BaselineRecord:
     wall_time: float
     acc_global: float
     client_acc: Dict[int, float]
+    latency_only: bool = False
 
 
 class BaselineRunner:
@@ -81,7 +82,10 @@ class BaselineRunner:
                                 jnp.asarray(ys), jnp.asarray(mask),
                                 self.global_params)
 
-    def run_round(self) -> BaselineRecord:
+    def run_round(self, latency_only: bool = False) -> BaselineRecord:
+        """One baseline round. latency_only skips CNN training, evaluation
+        and aggregation (straggling/wall-time benchmarking — the latency
+        figures only need the scheduling decisions, not the models)."""
         env, cfg = self.env, self.env.cfg
         r = self._round
         clients = env.select_clients()
@@ -106,6 +110,8 @@ class BaselineRunner:
             t_l = env.latency.local_train_time(env.profiles[c], r, self.size,
                                                e, include_lite=False)
             local_times.append(t_l)
+            if latency_only:
+                continue
             start = (self.personal[c] if self.algo == "pfedme"
                      else self.global_params)
             p = self._train_client(c, e, start)
@@ -114,16 +120,18 @@ class BaselineRunner:
                 self.personal[c] = p
             client_acc[c] = env.client_test_accuracy(p, self.cnn_cfg, c)
 
-        sizes = [len(env.partitions[c]) for c in clients]
-        self.global_params = fedavg_aggregate(client_params, sizes)
+        if not latency_only:
+            sizes = [len(env.partitions[c]) for c in clients]
+            self.global_params = fedavg_aggregate(client_params, sizes)
         if self.algo == "fedddrl":
             self.intensity.feedback(local_times)
 
         rec = BaselineRecord(
             round_idx=r, straggling=straggling_latency(local_times),
             wall_time=max(a + t for a, t in zip(assess, local_times)),
-            acc_global=env.test_accuracy(self.global_params, self.cnn_cfg),
-            client_acc=client_acc)
+            acc_global=(0.0 if latency_only else
+                        env.test_accuracy(self.global_params, self.cnn_cfg)),
+            client_acc=client_acc, latency_only=latency_only)
         self.history.append(rec)
         self._round += 1
         return rec
@@ -137,7 +145,9 @@ class BaselineRunner:
         return self.history
 
     def summary(self) -> Dict[str, float]:
-        h = self.history
+        # latency_only rounds train/evaluate nothing — accuracy stats must
+        # come from real rounds only (mirrors HAPFLServer.summary)
+        h = [r for r in self.history if not r.latency_only] or self.history
         warm = h[len(h) // 3:] or h
         out = {
             "mean_straggling": float(np.mean([r.straggling for r in warm])),
@@ -147,6 +157,7 @@ class BaselineRunner:
         if self.algo == "pfedme":
             accs = [list(r.client_acc.values()) for r in h[-5:]]
             flat = [a for row in accs for a in row]
-            out["personal_acc_mean"] = float(np.mean(flat))
-            out["personal_acc_max"] = float(np.max(flat))
+            if flat:
+                out["personal_acc_mean"] = float(np.mean(flat))
+                out["personal_acc_max"] = float(np.max(flat))
         return out

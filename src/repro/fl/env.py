@@ -78,23 +78,53 @@ class FLEnvironment:
         return prefetch_steps(self.loaders, clients, steps_per_client,
                               pad_to=pad_to)
 
-    def select_clients(self) -> List[int]:
-        return sorted(self.rng.choice(self.cfg.n_clients,
-                                      size=self.cfg.k_per_round,
-                                      replace=False).tolist())
+    def select_clients(self, k: int = None, among: Sequence[int] = None,
+                       ) -> List[int]:
+        """Sample k participants. `among` restricts the pool (the event
+        scheduler excludes in-flight / offline clients); None keeps the
+        legacy full-pool draw byte-identical."""
+        kk = self.cfg.k_per_round if k is None else k
+        if among is None:
+            return sorted(self.rng.choice(self.cfg.n_clients,
+                                          size=min(kk, self.cfg.n_clients),
+                                          replace=False).tolist())
+        pool = np.asarray(sorted(among))
+        kk = min(kk, len(pool))
+        if kk == 0:
+            return []
+        return sorted(self.rng.choice(pool, size=kk, replace=False).tolist())
+
+    @staticmethod
+    def _chunked_accuracy(params, cnn_cfg: CNNConfig, x: np.ndarray,
+                          y: np.ndarray, chunk: int) -> float:
+        """Full-set accuracy in fixed-size chunks. The last partial chunk is
+        zero-padded to `chunk` rows so evaluation compiles at most two XLA
+        shapes regardless of set size."""
+        n = len(x)
+        if n <= chunk:
+            logits = apply_cnn(params, cnn_cfg, x)
+            return float(np.mean(np.argmax(np.asarray(logits), -1) == y))
+        correct = 0
+        for i in range(0, n, chunk):
+            xs, ys = x[i:i + chunk], y[i:i + chunk]
+            if len(xs) < chunk:
+                pad = chunk - len(xs)
+                xs = np.concatenate(
+                    [xs, np.zeros((pad,) + xs.shape[1:], xs.dtype)])
+            logits = apply_cnn(params, cnn_cfg, xs)
+            pred = np.argmax(np.asarray(logits)[:len(ys)], -1)
+            correct += int(np.sum(pred == ys))
+        return correct / n
 
     def test_accuracy(self, params, cnn_cfg: CNNConfig,
-                      max_n: int = 512) -> float:
-        x = self.data["x_test"][:max_n]
-        y = self.data["y_test"][:max_n]
-        logits = apply_cnn(params, cnn_cfg, x)
-        return float(np.mean(np.argmax(np.asarray(logits), -1) == y))
+                      chunk: int = 512) -> float:
+        return self._chunked_accuracy(params, cnn_cfg, self.data["x_test"],
+                                      self.data["y_test"], chunk)
 
     def client_test_accuracy(self, params, cnn_cfg: CNNConfig,
-                             client: int, max_n: int = 256) -> float:
+                             client: int, chunk: int = 256) -> float:
         """Accuracy on the client's own label distribution (personalized)."""
-        idx = self.partitions[client][:max_n]
-        x = self.data["x_train"][idx]
-        y = self.data["y_train"][idx]
-        logits = apply_cnn(params, cnn_cfg, x)
-        return float(np.mean(np.argmax(np.asarray(logits), -1) == y))
+        idx = self.partitions[client]
+        return self._chunked_accuracy(params, cnn_cfg,
+                                      self.data["x_train"][idx],
+                                      self.data["y_train"][idx], chunk)

@@ -4,19 +4,27 @@ Per round: assessment training -> PPO1 model allocation -> PPO2 intensity
 assignment -> client mutual-KD local training -> entropy+accuracy weighted
 aggregation (LiteModels globally, local models per size group) -> RL rewards
 and buffered PPO updates.
+
+The round body is factored into wave-level callbacks (`plan_wave`,
+`train_wave`, `apply_updates`, `feedback_wave`, `record_wave`) so the
+event-driven simulator (repro.sim, DESIGN.md §10) can drive the same
+machinery on arbitrary client subsets at arbitrary virtual times;
+`run_round` composes them into the synchronous barrier round, and the
+sync scheduling policy reproduces it byte-for-byte.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.allocation import ModelAllocator
 from repro.core.aggregation import (aggregation_weights, fedavg_aggregate,
-                                    group_aggregate, weighted_aggregate)
+                                    group_aggregate, staleness_weights,
+                                    weighted_aggregate)
 from repro.core.distill import make_mutual_train_step
 from repro.core.intensity import IntensityAllocator
 from repro.core.latency import straggling_latency
@@ -41,6 +49,25 @@ class RoundRecord:
     acc_by_size: Dict[str, float]
     client_acc: Dict[int, Dict[str, float]]
     latency_only: bool = False
+
+
+@dataclass
+class WavePlan:
+    """One dispatched cohort: the RL decisions plus (simulated) per-client
+    times, filled in by `plan_wave` and `train_wave`. `version` is the
+    server aggregation count at dispatch (staleness bookkeeping)."""
+    round_idx: int
+    clients: List[int]
+    assess: List[float]
+    sizes: List[str]
+    intensities: List[int]
+    local_times: List[float]
+    latency_only: bool = False
+    version: int = 0
+    t_dispatch: float = 0.0
+    client_params: List[Dict] = field(default_factory=list)
+    accs_local: List[float] = field(default_factory=list)
+    accs_lite: List[float] = field(default_factory=list)
 
 
 class HAPFLServer:
@@ -119,87 +146,178 @@ class HAPFLServer:
                         "straggling": rec.straggling})
         return out
 
-    def run_round(self, latency_only: bool = False,
-                  deterministic: bool = False,
-                  eval_accuracy: bool = True) -> RoundRecord:
-        """One Algorithm-1 round. eval_accuracy=False skips the global and
-        per-client test-set evaluations (throughput benchmarking knob;
-        aggregation then weights by entropy + uniform accuracy)."""
+    # ------------------------------------------------------------------ #
+    # wave-level callbacks (driven by run_round and by repro.sim)
+    # ------------------------------------------------------------------ #
+    def _pad(self, vals: Sequence):
+        """Pad a per-client list to the PPO state dim k by repeating the
+        first element. The PPO nets are built for k clients; a sub-k wave
+        (semi-async replacement dispatches) is padded with phantom copies of
+        a real client, which leaves every max/min/ratio statistic the
+        agents' states and rewards use unchanged."""
+        k = self.env.cfg.k_per_round
+        return list(vals) + [vals[0]] * (k - len(vals))
+
+    def plan_wave(self, clients: Optional[Sequence[int]] = None,
+                  latency_only: bool = False,
+                  deterministic: bool = False) -> WavePlan:
+        """Algorithm-1 steps 1-3 for one cohort: selection, assessment
+        times, PPO1 size allocation, PPO2 intensities, simulated local
+        times. Consumes the server rng exactly like the legacy round."""
         env, cfg = self.env, self.env.cfg
         r = self._round
-        clients = env.select_clients()
+        self._round += 1
+        if clients is None:
+            clients = env.select_clients()
+        clients = list(clients)
+        m = len(clients)
         # 1. performance assessment training (one Lite epoch, simulated time)
         assess = [env.latency.assessment_time(env.profiles[c], r)
                   for c in clients]
         # 2. PPO1: model allocation
         self.key, k1, k2 = jax.random.split(self.key, 3)
         if self.use_ppo1:
-            sizes, _ = self.allocator.allocate(k1, assess, deterministic)
+            sizes, _ = self.allocator.allocate(k1, self._pad(assess),
+                                               deterministic)
+            sizes = sizes[:m]
         else:
-            sizes = [list(env.pool)[0]] * len(clients)
+            sizes = [list(env.pool)[0]] * m
         # 3. PPO2: training intensities
-        norm = np.asarray(assess) / min(assess)
+        pad_assess = self._pad(assess)
+        norm = np.asarray(pad_assess) / min(pad_assess)
         modified = [env.latency.relative_time_ratio(s) * t
-                    for s, t in zip(sizes, norm)]
+                    for s, t in zip(self._pad(sizes), norm)]
         if self.use_ppo2:
-            intensities, _ = self.intensity.assign(k2, modified, deterministic)
+            intensities, _ = self.intensity.assign(k2, modified,
+                                                   deterministic)
+            intensities = intensities[:m]
         else:
-            intensities = [cfg.default_epochs] * len(clients)
-        # 4. local mutual-KD training (real) + latency (simulated)
-        local_times = [env.latency.local_train_time(env.profiles[c], r, s, tau)
+            intensities = [cfg.default_epochs] * m
+        local_times = [env.latency.local_train_time(env.profiles[c], r, s,
+                                                    tau)
                        for c, s, tau in zip(clients, sizes, intensities)]
-        client_params: List[Dict] = []
-        if latency_only:
-            accs_local = [0.0] * len(clients)
-            accs_lite = [0.0] * len(clients)
+        return WavePlan(round_idx=r, clients=clients, assess=assess,
+                        sizes=sizes, intensities=list(intensities),
+                        local_times=local_times, latency_only=latency_only)
+
+    def train_wave(self, plan: WavePlan, eval_accuracy: bool = True,
+                   ) -> WavePlan:
+        """Step 4: real mutual-KD training from the *current* globals (in
+        the event-driven sim this is the model state at dispatch time),
+        grouped into per-size cohorts by the batched engine."""
+        env = self.env
+        m = len(plan.clients)
+        if plan.latency_only:
+            plan.client_params = []
+            plan.accs_local = [0.0] * m
+            plan.accs_lite = [0.0] * m
+            return plan
+        if self.engine == "batched":
+            plan.client_params = self.batched_engine.train_cohort(
+                plan.clients, plan.sizes, plan.intensities,
+                self.global_by_size, self.lite_params)
         else:
-            if self.engine == "batched":
-                client_params = self.batched_engine.train_cohort(
-                    clients, sizes, intensities, self.global_by_size,
-                    self.lite_params)
-            else:
-                client_params = [
-                    self._client_train(c, s, tau)
-                    for c, s, tau in zip(clients, sizes, intensities)]
-            if eval_accuracy:
-                accs_local = [
-                    env.client_test_accuracy(p["local"], env.pool[s], c)
-                    for p, s, c in zip(client_params, sizes, clients)]
-                accs_lite = [
-                    env.client_test_accuracy(p["lite"], env.lite_cfg, c)
-                    for p, c in zip(client_params, clients)]
-            else:
-                accs_local = [0.0] * len(clients)
-                accs_lite = [0.0] * len(clients)
-        # 5. aggregation
-        entropies = [env.entropies[c] for c in clients]
-        if latency_only:
-            pass
-        elif self.weighted_agg:
+            plan.client_params = [
+                self._client_train(c, s, tau)
+                for c, s, tau in zip(plan.clients, plan.sizes,
+                                     plan.intensities)]
+        if eval_accuracy:
+            plan.accs_local = [
+                env.client_test_accuracy(p["local"], env.pool[s], c)
+                for p, s, c in zip(plan.client_params, plan.sizes,
+                                   plan.clients)]
+            plan.accs_lite = [
+                env.client_test_accuracy(p["lite"], env.lite_cfg, c)
+                for p, c in zip(plan.client_params, plan.clients)]
+        else:
+            plan.accs_local = [0.0] * m
+            plan.accs_lite = [0.0] * m
+        return plan
+
+    def wave_updates(self, plan: WavePlan,
+                     indices: Optional[Sequence[int]] = None,
+                     staleness: Optional[int] = None) -> List[Dict]:
+        """Package (a subset of) a trained wave as update dicts for
+        `apply_updates`. `staleness` tags every listed update."""
+        idx = range(len(plan.clients)) if indices is None else indices
+        return [{"client": plan.clients[i], "size": plan.sizes[i],
+                 "params": plan.client_params[i],
+                 "entropy": self.env.entropies[plan.clients[i]],
+                 "acc_local": plan.accs_local[i],
+                 "acc_lite": plan.accs_lite[i],
+                 "staleness": staleness} for i in idx]
+
+    def apply_updates(self, updates: List[Dict],
+                      staleness_exponent: float = 0.5,
+                      mix: float = 1.0) -> int:
+        """Step 5 generalized: fold client updates (possibly cross-wave,
+        possibly stale) into the globals. With staleness=None on every
+        update and mix=1 this is exactly the legacy synchronous
+        aggregation."""
+        if not updates:
+            return 0
+        sizes = [u["size"] for u in updates]
+        ents = [u["entropy"] for u in updates]
+        accs_lite = [u["acc_lite"] for u in updates]
+        accs_local = [u["acc_local"] for u in updates]
+        stal = ([int(u["staleness"] or 0) for u in updates]
+                if any(u.get("staleness") is not None for u in updates)
+                else None)
+        if self.weighted_agg:
+            w = staleness_weights(ents, accs_lite, stal, staleness_exponent)
             self.lite_params = weighted_aggregate(
-                self.lite_params, [p["lite"] for p in client_params],
-                aggregation_weights(entropies, accs_lite))
+                self.lite_params, [u["params"]["lite"] for u in updates], w,
+                mix=mix)
             self.global_by_size = group_aggregate(
-                self.global_by_size, [p["local"] for p in client_params],
-                sizes, entropies, accs_local)
-        else:
-            self.lite_params = fedavg_aggregate([p["lite"] for p in client_params])
+                self.global_by_size, [u["params"]["local"] for u in updates],
+                sizes, ents, accs_local, staleness=stal,
+                staleness_exponent=staleness_exponent, mix=mix)
+        elif stal is None and mix == 1.0:
+            self.lite_params = fedavg_aggregate(
+                [u["params"]["lite"] for u in updates])
             for s in set(sizes):
                 idx = [i for i, ss in enumerate(sizes) if ss == s]
                 self.global_by_size[s] = fedavg_aggregate(
-                    [client_params[i]["local"] for i in idx])
-        # 6. RL rewards (Algorithm 1 lines 22-30)
-        rw1 = (self.allocator.feedback(local_times, intensities)
+                    [updates[i]["params"]["local"] for i in idx])
+        else:
+            # unweighted async: uniform base weights (softmax of zeros),
+            # still staleness-discounted and server-mixed
+            w = staleness_weights([0.0] * len(updates), [0.0] * len(updates),
+                                  stal, staleness_exponent)
+            self.lite_params = weighted_aggregate(
+                self.lite_params, [u["params"]["lite"] for u in updates], w,
+                mix=mix)
+            self.global_by_size = group_aggregate(
+                self.global_by_size, [u["params"]["local"] for u in updates],
+                sizes, [0.0] * len(updates), [0.0] * len(updates),
+                staleness=stal, staleness_exponent=staleness_exponent,
+                mix=mix)
+        return len(updates)
+
+    def feedback_wave(self, plan: WavePlan):
+        """Step 6: RL rewards (Algorithm 1 lines 22-30)."""
+        rw1 = (self.allocator.feedback(self._pad(plan.local_times),
+                                       self._pad(plan.intensities))
                if self.use_ppo1 else 0.0)
-        rw2 = self.intensity.feedback(local_times) if self.use_ppo2 else 0.0
-        # 7. bookkeeping
-        wall = max(a + t for a, t in zip(assess, local_times))
-        skip_eval = latency_only or not eval_accuracy
+        rw2 = (self.intensity.feedback(self._pad(plan.local_times))
+               if self.use_ppo2 else 0.0)
+        return rw1, rw2
+
+    def record_wave(self, plan: WavePlan, rw1: float, rw2: float,
+                    eval_accuracy: bool = True,
+                    wall_time: Optional[float] = None) -> RoundRecord:
+        """Step 7: bookkeeping. wall_time defaults to the synchronous
+        barrier (max assess+local); the scheduler passes the measured
+        virtual-clock span instead."""
+        env = self.env
+        wall = (max(a + t for a, t in zip(plan.assess, plan.local_times))
+                if wall_time is None else wall_time)
+        skip_eval = plan.latency_only or not eval_accuracy
         rec = RoundRecord(
-            round_idx=r, clients=clients, sizes=sizes,
-            intensities=[int(i) for i in intensities],
-            assess_times=assess, local_times=local_times,
-            straggling=straggling_latency(local_times), wall_time=wall,
+            round_idx=plan.round_idx, clients=plan.clients, sizes=plan.sizes,
+            intensities=[int(i) for i in plan.intensities],
+            assess_times=plan.assess, local_times=plan.local_times,
+            straggling=straggling_latency(plan.local_times), wall_time=wall,
             reward_ppo1=rw1, reward_ppo2=rw2,
             acc_lite=(0.0 if skip_eval else
                       env.test_accuracy(self.lite_params, env.lite_cfg)),
@@ -207,14 +325,29 @@ class HAPFLServer:
                          {s: env.test_accuracy(self.global_by_size[s],
                                                env.pool[s])
                           for s in env.pool}),
-            client_acc={c: {"local": accs_local[i], "lite": accs_lite[i],
-                            "size": sizes[i]}
-                        for i, c in enumerate(clients)},
-            latency_only=latency_only,
+            client_acc={c: {"local": plan.accs_local[i],
+                            "lite": plan.accs_lite[i],
+                            "size": plan.sizes[i]}
+                        for i, c in enumerate(plan.clients)},
+            latency_only=plan.latency_only,
         )
         self.history.append(rec)
-        self._round += 1
         return rec
+
+    # ------------------------------------------------------------------ #
+    def run_round(self, latency_only: bool = False,
+                  deterministic: bool = False,
+                  eval_accuracy: bool = True) -> RoundRecord:
+        """One Algorithm-1 round. eval_accuracy=False skips the global and
+        per-client test-set evaluations (throughput benchmarking knob;
+        aggregation then weights by entropy + uniform accuracy)."""
+        plan = self.plan_wave(latency_only=latency_only,
+                              deterministic=deterministic)
+        self.train_wave(plan, eval_accuracy=eval_accuracy)
+        if not plan.latency_only:
+            self.apply_updates(self.wave_updates(plan))
+        rw1, rw2 = self.feedback_wave(plan)
+        return self.record_wave(plan, rw1, rw2, eval_accuracy=eval_accuracy)
 
     def run(self, rounds: int, verbose: bool = False) -> List[RoundRecord]:
         for _ in range(rounds):
