@@ -1,7 +1,7 @@
 PY      := python
 PYPATH  := PYTHONPATH=src:.
 
-.PHONY: test test-slow bench-smoke bench lint
+.PHONY: test test-slow bench-smoke bench check-regression lint
 
 ## tier-1 verification (what CI runs)
 test:
@@ -12,8 +12,14 @@ test-slow:
 	PYTHONPATH=src $(PY) -m pytest -q --run-slow
 
 ## fast benchmark smoke: kernels + latency figures + engine throughput
+## + cross-size aggregation comparison
 bench-smoke:
-	$(PYPATH) $(PY) benchmarks/run.py --quick --only kernels,roofline,latency
+	$(PYPATH) $(PY) benchmarks/run.py --quick --only kernels,roofline,latency,cross_size
+
+## bench-regression gate: fail if any policy's sync-relative time-to-target
+## regressed >25% vs the committed baseline (see benchmarks/check_regression.py)
+check-regression:
+	$(PYPATH) $(PY) benchmarks/check_regression.py
 
 ## full paper-figure benchmark sweep (slow)
 bench:
@@ -23,5 +29,6 @@ bench:
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
 	PYTHONPATH=src $(PY) -c "import repro, repro.fl, repro.fl.batched, \
-repro.core, repro.kernels, repro.models, repro.launch, repro.sim"
+repro.core, repro.core.nested, repro.data, repro.kernels, repro.models, \
+repro.launch, repro.optim, repro.serve, repro.sim, repro.train"
 	@echo lint OK

@@ -1,5 +1,10 @@
 """Paper Figs 4-21 + Tables III/IV: accuracy/loss of LiteModel, small and
 large models under HAPFL vs FedAvg, FedProx; personalized accuracy vs pFedMe.
+
+Also here: the cross-size aggregation comparison (group vs HeteroFL-style
+nested, DESIGN.md §12) — accuracy-per-round of every size's global model on
+the synthetic non-IID partition at 10/50 clients, emitted to
+artifacts/bench/cross_size.json.
 """
 from __future__ import annotations
 
@@ -7,6 +12,74 @@ import numpy as np
 
 from benchmarks.common import Timer, emit, save_csv, save_json
 from repro.fl import BaselineRunner, FLEnvironment, FLSimConfig, HAPFLServer
+from repro.models.cnn import nested_order
+
+
+def run_cross_size_comparison(cohorts=(10, 50), rounds: int = 10,
+                              k_per_round: int = 6, seed: int = 0,
+                              n_train: int = 2000, n_test: int = 400,
+                              default_epochs: int = 8, lr: float = 2e-2,
+                              batch_size: int = 8,
+                              sizes=("small", "medium", "large"),
+                              artifact_name: str = "cross_size"):
+    """group vs cross_size aggregation, accuracy-per-round per size group.
+
+    The latency model (and therefore every PPO decision) is a pure function
+    of (seed, client, round), so both modes schedule the *identical*
+    sequence of cohorts, size allocations and intensities — the aggregation
+    rule is the only difference. The headline metric is the smallest size
+    group's mean accuracy over rounds: under `group` it learns only from
+    the few clients assigned that size; under `cross_size` every client's
+    shared slices feed it (DESIGN.md §12). The effect is cohort-size
+    dependent: with k=6 of 50 clients each size group starves and
+    cross_size wins across the board; at 10 clients every group already
+    sees enough of its own updates and cross-size mixing buys nothing.
+
+    The sequential engine is pinned: only k clients train per round, so
+    the batched engine's per-(size, steps)-shape compiles never amortize
+    inside this short benchmark.
+    """
+    out = {}
+    for n_clients in cohorts:
+        cfg = FLSimConfig(dataset="mnist", n_clients=n_clients,
+                          k_per_round=min(k_per_round, n_clients),
+                          size_names=tuple(sizes), n_train=n_train,
+                          n_test=n_test, default_epochs=default_epochs,
+                          batches_per_epoch=2, batch_size=batch_size, lr=lr,
+                          seed=seed)
+        row = {}
+        for mode in ("group", "cross_size"):
+            env = FLEnvironment(cfg)
+            srv = HAPFLServer(env, seed=seed, aggregation=mode,
+                              engine="sequential")
+            with Timer() as t:
+                srv.run(rounds)
+            curve = [dict(round=r.round_idx, acc_lite=round(r.acc_lite, 4),
+                          **{s: round(r.acc_by_size[s], 4) for s in sizes})
+                     for r in srv.history]
+            row[mode] = {
+                "acc_per_round": curve,
+                "mean_acc_by_size": {
+                    s: round(float(np.mean([r.acc_by_size[s]
+                                            for r in srv.history])), 4)
+                    for s in sizes},
+                "final_acc_by_size": {
+                    s: round(srv.history[-1].acc_by_size[s], 4)
+                    for s in sizes},
+                "wall_seconds": round(t.seconds, 1),
+            }
+            smallest = nested_order(env.pool)[0]
+        row["smallest_size"] = smallest
+        delta = (row["cross_size"]["mean_acc_by_size"][smallest]
+                 - row["group"]["mean_acc_by_size"][smallest])
+        row["cross_size_minus_group_mean_acc_smallest"] = round(delta, 4)
+        row["cross_size_ge_group_smallest"] = bool(delta >= 0)
+        out[f"{n_clients}_clients"] = row
+        emit(f"cross_size_agg_{n_clients}c",
+             row["cross_size"]["wall_seconds"] * 1e6 / max(rounds, 1),
+             f"smallest={smallest};delta_mean_acc={delta:+.4f}")
+    save_json(artifact_name, out)
+    return out
 
 
 def main(dataset: str = "mnist", rounds: int = 25, warmup: int = 1000,

@@ -1,0 +1,115 @@
+"""Bench-regression gate for the scheduling-policy comparison.
+
+Compares the freshly generated ``artifacts/bench/async_modes.json`` (written
+by ``make bench-smoke`` -> bench_latency.run_policy_comparison) against the
+committed baseline ``artifacts/bench/baselines/async_modes.json`` and fails
+(exit 1) when any policy's **sync-relative time-to-target** regressed more
+than ``--tolerance`` (default 25%):
+
+    ratio(policy) = time_to_target(policy) / time_to_target(sync)
+
+The ratio is a pure function of the simulated virtual clock, so it is
+machine-speed independent — only a behavioral change in the scheduler,
+aggregation, or training path can move it. Policies whose baseline never
+reached the target (``time_to_target: null`` — buffered/async at tight
+budgets) are *uncompared* and loudly noted, not guarded: the gate's
+guarantee covers exactly the policies with a baseline ratio. A policy
+that reached the target in the baseline but not in the current run is a
+hard failure, and policies missing from the baseline entirely (newly
+added) are flagged so the baseline gets refreshed.
+
+After an *intentional* change (new policy defaults, different budget),
+refresh the baseline and commit it:
+
+    PYTHONPATH=src:. python benchmarks/run.py --quick --only latency
+    PYTHONPATH=src:. python benchmarks/check_regression.py --update-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+BENCH = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+CURRENT = BENCH / "async_modes.json"
+BASELINE = BENCH / "baselines" / "async_modes.json"
+
+
+def sync_relative_ttt(modes: dict) -> dict:
+    """policy -> time_to_target / sync's time_to_target (None when either
+    side never reached the target accuracy)."""
+    sync_ttt = (modes.get("sync") or {}).get("time_to_target")
+    out = {}
+    for name, row in modes.items():
+        ttt = row.get("time_to_target")
+        out[name] = (ttt / sync_ttt) if (ttt and sync_ttt) else None
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", type=Path, default=CURRENT)
+    ap.add_argument("--baseline", type=Path, default=BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative regression of the sync-relative "
+                         "time-to-target (0.25 = 25%%)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy the current artifact over the baseline "
+                         "instead of checking")
+    args = ap.parse_args(argv)
+
+    if not args.current.exists():
+        print(f"regression gate: missing {args.current} — run "
+              f"`make bench-smoke` first", file=sys.stderr)
+        return 1
+    if args.update_baseline:
+        args.baseline.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+    if not args.baseline.exists():
+        print(f"regression gate: missing baseline {args.baseline} — commit "
+              f"one with --update-baseline", file=sys.stderr)
+        return 1
+
+    cur = json.loads(args.current.read_text())
+    base = json.loads(args.baseline.read_text())
+    cur_r, base_r = sync_relative_ttt(cur), sync_relative_ttt(base)
+    failures = []
+    for name in sorted(set(base_r) | set(cur_r)):
+        if name == "sync":
+            continue               # its own ratio is 1 by construction
+        b, c = base_r.get(name), cur_r.get(name)
+        if name not in base_r:
+            print(f"  {name:9s} NOT IN BASELINE — uncompared; refresh with "
+                  f"--update-baseline to guard it")
+            continue
+        if b is None:
+            print(f"  {name:9s} skipped (baseline never reached target at "
+                  f"this budget — uncompared)")
+            continue
+        if c is None:
+            failures.append(f"{name}: reached target in baseline "
+                            f"(ratio {b:.3f}) but not in current run")
+            continue
+        rel = c / b - 1.0
+        status = "FAIL" if rel > args.tolerance else "ok"
+        print(f"  {name:9s} sync-relative ttt {b:.3f} -> {c:.3f} "
+              f"({rel:+.1%}) {status}")
+        if rel > args.tolerance:
+            failures.append(f"{name}: sync-relative time-to-target "
+                            f"{b:.3f} -> {c:.3f} (+{rel:.1%} > "
+                            f"{args.tolerance:.0%} tolerance)")
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("bench regression gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,6 +6,7 @@ artifacts/bench/. Budget knobs keep the default full run CPU-tractable;
 
   fig2/fig3   bench_rl          PPO reward curves
   fig4-21     bench_accuracy    accuracy/loss vs FedAvg/FedProx (+Tab III/IV)
+  (ours)      bench_accuracy    cross_size: group vs nested aggregation
   fig22/23    bench_latency     straggling latency + overall training time
   fig24       bench_scalability 20/100-client model-allocation scaling
   fig25       bench_ablation    fixed-size / fixed-intensity ablations
@@ -24,8 +25,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="tiny budgets (CI smoke)")
     ap.add_argument("--only", default="",
-                    help="comma list: rl,accuracy,latency,scalability,"
-                         "ablation,roofline,kernels")
+                    help="comma list: rl,accuracy,cross_size,latency,"
+                         "scalability,ablation,roofline,kernels")
     ap.add_argument("--datasets", default="mnist",
                     help="comma list for accuracy bench")
     args = ap.parse_args()
@@ -64,6 +65,16 @@ def main() -> None:
                 warmup=200 if q else 1000,
                 n_train=800 if q else 2000,
                 default_epochs=6 if q else 10))
+    if want("cross_size"):
+        from benchmarks import bench_accuracy
+        # quick mode writes cross_size_quick.json: the committed
+        # artifacts/bench/cross_size.json is the full 10/50-client record
+        # and must not be clobbered by a smoke run
+        run("cross_size", lambda: bench_accuracy.run_cross_size_comparison(
+            cohorts=(10,) if q else (10, 50), rounds=4 if q else 10,
+            n_train=800 if q else 2000, n_test=200 if q else 400,
+            default_epochs=4 if q else 8,
+            artifact_name="cross_size_quick" if q else "cross_size"))
     if want("scalability"):
         from benchmarks import bench_scalability
         run("scalability", lambda: bench_scalability.main(

@@ -5,6 +5,7 @@
   intensity    — PPO2: training-intensity adjustment
   distill      — KD-based mutual learning (LiteModel <-> local model)
   aggregation  — entropy + accuracy weighted aggregation
+  nested       — cross-size nested (HeteroFL-style) aggregation
   latency      — client performance / straggling-latency model
 """
 from repro.core.ppo import PPOAgent, PPOConfig, discounted_returns
@@ -15,5 +16,7 @@ from repro.core.distill import (mutual_losses, make_mutual_train_step,
 from repro.core.aggregation import (information_entropy, aggregation_weights,
                                     weighted_aggregate, fedavg_aggregate,
                                     group_aggregate)
+from repro.core.nested import (extract_submodel, embed_submodel,
+                               coverage_mask, nested_aggregate)
 from repro.core.latency import (ClientProfile, LatencyModel,
                                 make_heterogeneous_clients, straggling_latency)

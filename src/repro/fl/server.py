@@ -2,8 +2,9 @@
 
 Per round: assessment training -> PPO1 model allocation -> PPO2 intensity
 assignment -> client mutual-KD local training -> entropy+accuracy weighted
-aggregation (LiteModels globally, local models per size group) -> RL rewards
-and buffered PPO updates.
+aggregation (LiteModels globally; local models per size group, or
+cross-size nested with ``aggregation="cross_size"`` — DESIGN.md §12) ->
+RL rewards and buffered PPO updates.
 
 The round body is factored into wave-level callbacks (`plan_wave`,
 `train_wave`, `apply_updates`, `feedback_wave`, `record_wave`) so the
@@ -28,6 +29,7 @@ from repro.core.aggregation import (aggregation_weights, fedavg_aggregate,
 from repro.core.distill import make_mutual_train_step
 from repro.core.intensity import IntensityAllocator
 from repro.core.latency import straggling_latency
+from repro.core.nested import nested_aggregate
 from repro.fl.batched import BatchedClientEngine
 from repro.fl.env import FLEnvironment
 from repro.models.cnn import apply_cnn, init_cnn
@@ -75,11 +77,13 @@ class HAPFLServer:
                  use_ppo1: bool = True, use_ppo2: bool = True,
                  weighted_agg: bool = True,
                  lr_ppo1: float = 2e-3, lr_ppo2: float = 3e-4,
-                 engine: str = "auto"):
+                 engine: str = "auto", aggregation: str = "group"):
         # paper Table II: lr1=0.02 — unstable for Adam on our tiny actor
         # (PPO1 reward degrades); 2e-3 learns cleanly (DESIGN.md §8).
         if engine not in ("auto", "batched", "sequential"):
             raise ValueError(f"unknown engine {engine!r}")
+        if aggregation not in ("group", "cross_size"):
+            raise ValueError(f"unknown aggregation {aggregation!r}")
         if engine == "auto":
             # batching wins when per-step compute is small (dispatch-bound
             # small batches) or the backend has parallel hardware; at large
@@ -89,6 +93,7 @@ class HAPFLServer:
                       or jax.default_backend() != "cpu" else "sequential")
         self.env = env
         self.engine = engine
+        self.aggregation = aggregation
         cfg = env.cfg
         self.use_ppo1, self.use_ppo2 = use_ppo1, use_ppo2
         self.weighted_agg = weighted_agg
@@ -247,19 +252,34 @@ class HAPFLServer:
                  "acc_lite": plan.accs_lite[i],
                  "staleness": staleness} for i in idx]
 
+    def _aggregate_local(self, locals_, sizes, ents, accs, stal,
+                         staleness_exponent, mix):
+        """Route the heterogeneous-model aggregation: per-size-group (legacy,
+        Eq. 5) or cross-size nested (HeteroFL-style coverage-weighted,
+        DESIGN.md §12). Both consume the same staleness tags."""
+        if self.aggregation == "cross_size":
+            return nested_aggregate(
+                self.global_by_size, self.env.pool, locals_, sizes, ents,
+                accs, staleness=stal, staleness_exponent=staleness_exponent,
+                mix=mix)
+        return group_aggregate(
+            self.global_by_size, locals_, sizes, ents, accs, staleness=stal,
+            staleness_exponent=staleness_exponent, mix=mix)
+
     def apply_updates(self, updates: List[Dict],
                       staleness_exponent: float = 0.5,
                       mix: float = 1.0) -> int:
         """Step 5 generalized: fold client updates (possibly cross-wave,
         possibly stale) into the globals. With staleness=None on every
-        update and mix=1 this is exactly the legacy synchronous
-        aggregation."""
+        update, mix=1 and aggregation="group" this is exactly the legacy
+        synchronous aggregation."""
         if not updates:
             return 0
         sizes = [u["size"] for u in updates]
         ents = [u["entropy"] for u in updates]
         accs_lite = [u["acc_lite"] for u in updates]
         accs_local = [u["acc_local"] for u in updates]
+        locals_ = [u["params"]["local"] for u in updates]
         stal = ([int(u["staleness"] or 0) for u in updates]
                 if any(u.get("staleness") is not None for u in updates)
                 else None)
@@ -268,11 +288,10 @@ class HAPFLServer:
             self.lite_params = weighted_aggregate(
                 self.lite_params, [u["params"]["lite"] for u in updates], w,
                 mix=mix)
-            self.global_by_size = group_aggregate(
-                self.global_by_size, [u["params"]["local"] for u in updates],
-                sizes, ents, accs_local, staleness=stal,
-                staleness_exponent=staleness_exponent, mix=mix)
-        elif stal is None and mix == 1.0:
+            self.global_by_size = self._aggregate_local(
+                locals_, sizes, ents, accs_local, stal, staleness_exponent,
+                mix)
+        elif stal is None and mix == 1.0 and self.aggregation == "group":
             self.lite_params = fedavg_aggregate(
                 [u["params"]["lite"] for u in updates])
             for s in set(sizes):
@@ -280,18 +299,17 @@ class HAPFLServer:
                 self.global_by_size[s] = fedavg_aggregate(
                     [updates[i]["params"]["local"] for i in idx])
         else:
-            # unweighted async: uniform base weights (softmax of zeros),
-            # still staleness-discounted and server-mixed
-            w = staleness_weights([0.0] * len(updates), [0.0] * len(updates),
-                                  stal, staleness_exponent)
+            # unweighted: uniform base weights (softmax of zeros), still
+            # staleness-discounted / server-mixed / cross-size as configured
+            n = len(updates)
+            w = staleness_weights([0.0] * n, [0.0] * n, stal,
+                                  staleness_exponent)
             self.lite_params = weighted_aggregate(
                 self.lite_params, [u["params"]["lite"] for u in updates], w,
                 mix=mix)
-            self.global_by_size = group_aggregate(
-                self.global_by_size, [u["params"]["local"] for u in updates],
-                sizes, [0.0] * len(updates), [0.0] * len(updates),
-                staleness=stal, staleness_exponent=staleness_exponent,
-                mix=mix)
+            self.global_by_size = self._aggregate_local(
+                locals_, sizes, [0.0] * n, [0.0] * n, stal,
+                staleness_exponent, mix)
         return len(updates)
 
     def feedback_wave(self, plan: WavePlan):

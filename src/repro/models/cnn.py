@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,30 +21,72 @@ class CNNConfig:
     hidden: int
     n_classes: int = 10
 
+    def flat_grid(self) -> Tuple[int, int, int]:
+        """(H, W, C) of the feature map entering fc1: the row layout of the
+        flatten boundary (row index = (h*W + w)*C + c, NHWC row-major)."""
+        h = self.in_shape[0] // (2 ** len(self.channels))
+        w = self.in_shape[1] // (2 ** len(self.channels))
+        return max(h, 1), max(w, 1), self.channels[-1]
+
     def num_params(self) -> int:
         c_in = self.in_shape[2]
         total = 0
         for c in self.channels:
             total += 3 * 3 * c_in * c + c
             c_in = c
-        h = self.in_shape[0] // (2 ** len(self.channels))
-        w = self.in_shape[1] // (2 ** len(self.channels))
-        flat = max(h, 1) * max(w, 1) * c_in
+        h, w, _ = self.flat_grid()
+        flat = h * w * c_in
         total += flat * self.hidden + self.hidden
         total += self.hidden * self.n_classes + self.n_classes
         return total
 
 
+def config_nests_in(inner: CNNConfig, outer: CNNConfig) -> bool:
+    """True when `inner`'s widths are leading slices of `outer`'s: same input
+    and classes, no more conv stages, and elementwise-smaller channel/hidden
+    widths on the shared stages. This is what makes cross-size aggregation
+    (core.nested, DESIGN.md §12) well defined on the pool."""
+    return (inner.in_shape == outer.in_shape
+            and inner.n_classes == outer.n_classes
+            and len(inner.channels) <= len(outer.channels)
+            and all(ci <= co for ci, co in zip(inner.channels, outer.channels))
+            and inner.hidden <= outer.hidden)
+
+
+def nested_order(pool: Dict[str, CNNConfig]) -> List[str]:
+    """Pool size names ordered smallest-to-largest by width (depth, then
+    channels, then hidden). Not parameter count: an extra pooling stage
+    shrinks the flatten layer, so a deeper model can have *fewer* params
+    than a shallower one (imagenet10 medium vs large) while still being
+    the wider architecture."""
+    return sorted(pool, key=lambda s: (len(pool[s].channels),
+                                       pool[s].channels, pool[s].hidden))
+
+
+def assert_nested_pool(pool: Dict[str, CNNConfig]) -> None:
+    """Every pair of pool configs, ordered by size, must nest."""
+    order = nested_order(pool)
+    for a, b in zip(order, order[1:]):
+        if not config_nests_in(pool[a], pool[b]):
+            raise AssertionError(
+                f"model pool is not width-nested: {pool[a]} !< {pool[b]}")
+
+
 def cnn_pool(dataset: str) -> Dict[str, CNNConfig]:
-    """The paper's {LiteModel, small, large} pool per dataset."""
+    """The paper's {LiteModel, small, large} pool per dataset. The pool is
+    width-nested by construction (8 <= 16,32 <= 24,48 <= 32,64,128) and
+    `assert_nested_pool` pins that invariant — cross-size aggregation
+    depends on it."""
     shapes = {"mnist": (28, 28, 1), "cifar10": (32, 32, 3), "imagenet10": (64, 64, 3)}
     s = shapes[dataset]
-    return {
+    pool = {
         "lite": CNNConfig(f"{dataset}-lite", s, (8,), 32),
         "small": CNNConfig(f"{dataset}-small", s, (16, 32), 64),
         "medium": CNNConfig(f"{dataset}-medium", s, (24, 48), 96),
         "large": CNNConfig(f"{dataset}-large", s, (32, 64, 128), 128),
     }
+    assert_nested_pool(pool)
+    return pool
 
 
 def init_cnn(key, cfg: CNNConfig):

@@ -7,6 +7,12 @@
 | buffered | every `buffer_m` arrivals| the buffer (cross-wave)| Eq. 38 x staleness |
 | async    | every arrival            | that update            | Eq. 38 x staleness, server mix |
 
+Every policy composes with both server aggregation modes: under
+`HAPFLServer(aggregation="cross_size")` each aggregation event feeds every
+size's shared parameter slices (coverage-weighted, DESIGN.md §12) instead
+of only the update's own size group, and the staleness tags above flow
+into the per-slice coverage weights unchanged.
+
 `sync` must reproduce `HAPFLServer.run` exactly (tests/test_sim.py).
 `deadline`'s deadline is a quantile of the wave's predicted finish offsets
 (or a fixed horizon); over-provisioning is expressed by running it with a

@@ -19,7 +19,10 @@ test in tests/test_sim.py pins this. Under `buffered`/`async` the server's
 in-flight population is topped up after every aggregation, so fast clients
 keep contributing while stragglers compute; their late updates carry
 staleness tau = aggregations-since-dispatch and are discounted by
-(1+tau)^-a.
+(1+tau)^-a. The staleness tags are policy-level metadata handed to
+`HAPFLServer.apply_updates`, so they reach whichever aggregation mode the
+server runs — per-size-group or cross-size nested (DESIGN.md §12) — without
+the scheduler knowing which.
 """
 from __future__ import annotations
 

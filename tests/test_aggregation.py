@@ -1,0 +1,101 @@
+"""Aggregation-API unit tests: staleness_weights and
+group_aggregate(staleness=...) behavior in isolation (previously only
+exercised end-to-end through the event-driven simulator)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (aggregation_weights, fedavg_aggregate,
+                                    group_aggregate, staleness_weights,
+                                    weighted_aggregate)
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _params(val):
+    return {"w": np.full((3, 2), val, np.float32),
+            "b": np.full((4,), -val, np.float32)}
+
+
+def test_staleness_weights_sum_to_one_and_order():
+    e, a = [2.0, 1.0, 0.3, 1.5], [0.1, 0.9, 0.4, 0.4]
+    w = staleness_weights(e, a, [3, 0, 1, 0])
+    assert w.sum() == pytest.approx(1.0)
+    fresh = staleness_weights(e, a, None)
+    # discounting can only lower a stale client's *relative* weight
+    assert w[0] / w[1] < fresh[0] / fresh[1]
+
+
+def test_staleness_weights_zero_exponent_is_no_discount():
+    e, a = [1.0, 0.2, 2.0], [0.5, 0.1, 0.9]
+    w = staleness_weights(e, a, [5, 0, 2], exponent=0.0)
+    np.testing.assert_allclose(w, aggregation_weights(e, a), rtol=1e-12)
+
+
+def test_group_aggregate_staleness_none_matches_legacy_bitwise():
+    g = {"s": _params(1.0), "l": _params(2.0)}
+    clients = [_params(3.0), _params(4.0), _params(5.0)]
+    sizes = ["s", "l", "s"]
+    e, a = [1.0, 0.5, 2.0], [0.4, 0.9, 0.1]
+    out_none = group_aggregate(g, clients, sizes, e, a, staleness=None)
+    out_legacy = group_aggregate(g, clients, sizes, e, a)
+    for x, y in zip(_leaves(out_none), _leaves(out_legacy)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_group_aggregate_staleness_renormalizes_per_group():
+    """Staleness on a size-s client must not perturb size-l's aggregate:
+    weights renormalize within each group independently."""
+    g = {"s": _params(1.0), "l": _params(2.0)}
+    clients = [_params(3.0), _params(4.0), _params(5.0)]
+    sizes = ["s", "l", "s"]
+    e, a = [1.0, 0.5, 2.0], [0.4, 0.9, 0.1]
+    stale = group_aggregate(g, clients, sizes, e, a, staleness=[4, 0, 0])
+    fresh = group_aggregate(g, clients, sizes, e, a, staleness=[0, 0, 0])
+    for x, y in zip(_leaves(stale["l"]), _leaves(fresh["l"])):
+        np.testing.assert_array_equal(x, y)
+    # within group s the stale client 0 loses weight to client 2
+    assert not np.array_equal(np.asarray(stale["s"]["w"]),
+                              np.asarray(fresh["s"]["w"]))
+
+
+def test_group_aggregate_stale_update_pulls_less():
+    """Single group, two clients with identical Eq. 38 stats: the stale
+    one's parameters contribute strictly less to the aggregate."""
+    g = {"s": _params(0.0)}
+    lo, hi = _params(0.0), _params(10.0)
+    out = group_aggregate(g, [hi, lo], ["s", "s"], [1.0, 1.0], [0.5, 0.5],
+                          staleness=[6, 0])
+    w_hi = float(np.asarray(out["s"]["w"])[0, 0]) / 10.0
+    assert 0.0 < w_hi < 0.5     # < the undiscounted half share
+    d = staleness_weights([1.0, 1.0], [0.5, 0.5], [6, 0])
+    assert w_hi == pytest.approx(d[0], rel=1e-6)
+
+
+def test_group_aggregate_mix_zero_is_identity():
+    g = {"s": _params(1.0)}
+    out = group_aggregate(g, [_params(9.0)], ["s"], [1.0], [0.5], mix=0.0)
+    for x, y in zip(_leaves(out), _leaves(g)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_group_aggregate_untouched_sizes_pass_through_by_reference():
+    g = {"s": _params(1.0), "l": _params(2.0)}
+    out = group_aggregate(g, [_params(3.0)], ["s"], [1.0], [0.5])
+    assert out["l"] is g["l"]
+
+
+def test_weighted_aggregate_weight_scale_invariance():
+    g = _params(0.0)
+    clients = [_params(1.0), _params(2.0)]
+    a = weighted_aggregate(g, clients, [1.0, 2.0])
+    b = weighted_aggregate(g, clients, [2.0, 4.0])
+    for x, y in zip(_leaves(a), _leaves(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_fedavg_dataset_size_weighting():
+    out = fedavg_aggregate([_params(0.0), _params(4.0)], sizes=[3, 1])
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0, rtol=1e-6)

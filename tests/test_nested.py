@@ -1,0 +1,276 @@
+"""Cross-size nested aggregation: slice-map round trips, coverage masks,
+group_aggregate bit-identity, cross-size propagation, server/engine/sim
+integration (DESIGN.md §12)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.aggregation import group_aggregate
+from repro.core.nested import (coverage_mask, covers_all, embed_submodel,
+                               extract_submodel, nested_aggregate,
+                               zeros_params, _shared_rows)
+from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+from repro.models.cnn import (CNNConfig, assert_nested_pool, cnn_pool,
+                              config_nests_in, init_cnn, nested_order)
+from repro.sim import BufferedPolicy, EventScheduler
+
+
+POOL = cnn_pool("mnist")
+LITE, SMALL, MEDIUM, LARGE = (POOL[s] for s in ("lite", "small", "medium",
+                                                "large"))
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _assert_trees_equal(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+def _rand_params(cfg, seed):
+    return init_cnn(jax.random.PRNGKey(seed), cfg)
+
+
+# --------------------------------------------------------------------- #
+# nesting invariants
+# --------------------------------------------------------------------- #
+def test_pool_is_nested():
+    for ds in ("mnist", "cifar10", "imagenet10"):
+        pool = cnn_pool(ds)       # cnn_pool itself asserts; double-check
+        order = nested_order(pool)
+        assert order == ["lite", "small", "medium", "large"]
+        for a, b in zip(order, order[1:]):
+            assert config_nests_in(pool[a], pool[b])
+
+
+def test_assert_nested_pool_rejects_non_nested():
+    # y has more parameters than x but a *smaller* hidden width
+    x = CNNConfig("x", (28, 28, 1), (8,), 64)
+    y = CNNConfig("y", (28, 28, 1), (16, 32), 32)
+    assert not config_nests_in(x, y)
+    with pytest.raises(AssertionError):
+        assert_nested_pool({"x": x, "y": y})
+
+
+# --------------------------------------------------------------------- #
+# slice map: round trips and leading-slice semantics
+# --------------------------------------------------------------------- #
+def test_embed_extract_round_trip_exact():
+    """small fully nests in medium (same depth, wider everywhere), so the
+    round trip through a medium-shaped carrier is lossless and bit-exact."""
+    p = _rand_params(SMALL, 0)
+    carrier = embed_submodel(p, SMALL, MEDIUM)
+    back = extract_submodel(carrier, MEDIUM, SMALL)
+    _assert_trees_equal(back, p)
+
+
+def test_same_size_copy_is_passthrough():
+    p = _rand_params(SMALL, 1)
+    assert embed_submodel(p, SMALL, SMALL) is p
+    assert extract_submodel(p, SMALL, SMALL) is p
+
+
+def test_extract_takes_leading_slices():
+    p = _rand_params(MEDIUM, 2)
+    sub = extract_submodel(p, MEDIUM, SMALL)
+    for j in range(2):
+        cin = SMALL.in_shape[2] if j == 0 else SMALL.channels[j - 1]
+        np.testing.assert_array_equal(
+            sub["conv"][j],
+            np.asarray(p["conv"][j])[:, :, :cin, :SMALL.channels[j]])
+        np.testing.assert_array_equal(
+            sub["conv_b"][j], np.asarray(p["conv_b"][j])[:SMALL.channels[j]])
+    np.testing.assert_array_equal(sub["fc1_b"],
+                                  np.asarray(p["fc1_b"])[:SMALL.hidden])
+    np.testing.assert_array_equal(sub["fc2"],
+                                  np.asarray(p["fc2"])[:SMALL.hidden, :])
+
+
+def test_flatten_boundary_remap():
+    """fc1 rows are shared via the (h, w, c) grid remap, not leading rows:
+    small flattens a 7x7x32 map, large a 3x3x128 one."""
+    assert SMALL.flat_grid() == (7, 7, 32)
+    assert LARGE.flat_grid() == (3, 3, 128)
+    p = _rand_params(LARGE, 3)
+    sub = extract_submodel(p, LARGE, SMALL, base=zeros_params(SMALL))
+    fc1_l, fc1_s = np.asarray(p["fc1"]), sub["fc1"]
+    for (h, w, c) in [(0, 0, 0), (2, 1, 31), (1, 2, 7)]:
+        row_s = (h * 7 + w) * 32 + c
+        row_l = (h * 3 + w) * 128 + c
+        np.testing.assert_array_equal(fc1_s[row_s, :SMALL.hidden],
+                                      fc1_l[row_l, :SMALL.hidden])
+    # a row outside large's 3x3 grid is not shared: stays at the base
+    assert np.all(fc1_s[(5 * 7 + 5) * 32 + 0] == 0)
+    rs, rl = _shared_rows(SMALL, LARGE)
+    assert len(rs) == 3 * 3 * 32 == len(rl)
+
+
+def test_coverage_masks_and_covers_all():
+    assert covers_all(SMALL, SMALL)
+    assert covers_all(SMALL, MEDIUM)      # medium contains all of small
+    assert not covers_all(MEDIUM, SMALL)  # but not vice versa
+    assert not covers_all(SMALL, LARGE)   # extra pooling shrinks the grid
+    m = coverage_mask(SMALL, LARGE)
+    assert m["conv"][0].all() and m["conv"][1].all()
+    assert m["fc2"].all() and m["fc1_b"].all()
+    # shared fc1 region: 3*3 spatial sites x 32 channels x all 64 hidden
+    assert int(m["fc1"].sum()) == 3 * 3 * 32 * SMALL.hidden
+    # lite covers small's first conv only partially in c_out
+    ml = coverage_mask(SMALL, LITE)
+    assert int(ml["conv"][0].sum()) == 3 * 3 * 1 * LITE.channels[0]
+    assert not ml["conv"][1].any()        # lite has no second stage
+
+
+# --------------------------------------------------------------------- #
+# nested_aggregate semantics
+# --------------------------------------------------------------------- #
+def test_nested_aggregate_single_size_pool_bit_identical_to_group():
+    pool = {"small": SMALL}
+    g = {"small": _rand_params(SMALL, 10)}
+    clients = [_rand_params(SMALL, 11 + i) for i in range(3)]
+    sizes = ["small"] * 3
+    ents, accs = [1.0, 0.4, 2.2], [0.3, 0.8, 0.5]
+    for stal, mix in ((None, 1.0), ([0, 2, 1], 0.7)):
+        a = nested_aggregate(g, pool, clients, sizes, ents, accs,
+                             staleness=stal, mix=mix)
+        b = group_aggregate(g, clients, sizes, ents, accs, staleness=stal,
+                            mix=mix)
+        _assert_trees_equal(a["small"], b["small"])
+
+
+def test_nested_aggregate_cross_propagation():
+    """A lone small client updates medium's shared region and nothing else;
+    group_aggregate would leave medium completely untouched."""
+    pool = {"small": SMALL, "medium": MEDIUM}
+    g = {"small": _rand_params(SMALL, 20), "medium": _rand_params(MEDIUM, 21)}
+    p = _rand_params(SMALL, 22)
+    out = nested_aggregate(g, pool, [p], ["small"], [1.0], [0.5])
+    # small's own global: fully replaced (single client, mix=1) up to the
+    # float32 cancellation of the delta form g + (p - g)
+    for x, y in zip(_leaves(out["small"]), _leaves(p)):
+        np.testing.assert_allclose(x, y, atol=1e-6, rtol=1e-5)
+    med = out["medium"]
+    conv0 = np.asarray(med["conv"][0])
+    np.testing.assert_allclose(conv0[:, :, :, :16],
+                               np.asarray(p["conv"][0]),
+                               atol=1e-6, rtol=1e-5)
+    # channels 16.. of medium's conv0 belong to nobody in this cohort:
+    # bitwise untouched
+    np.testing.assert_array_equal(
+        conv0[:, :, :, 16:],
+        np.asarray(g["medium"]["conv"][0])[:, :, :, 16:])
+    # fc1: shared (h, w, c<32) rows move, hidden columns >= 64 stay put
+    fc1 = np.asarray(med["fc1"])
+    row_m, row_s = (1 * 7 + 2) * 48 + 5, (1 * 7 + 2) * 32 + 5
+    np.testing.assert_allclose(fc1[row_m, :64],
+                               np.asarray(p["fc1"])[row_s, :],
+                               atol=1e-6, rtol=1e-5)
+    np.testing.assert_array_equal(fc1[:, 64:],
+                                  np.asarray(g["medium"]["fc1"])[:, 64:])
+
+
+def test_nested_aggregate_coverage_renormalization():
+    """Per-entry weights renormalize over the covering set: a region only
+    one client owns gets that client's value outright."""
+    pool = {"small": SMALL, "large": LARGE}
+    g = {"small": _rand_params(SMALL, 30), "large": _rand_params(LARGE, 31)}
+    ps, pl = _rand_params(SMALL, 32), _rand_params(LARGE, 33)
+    # equal entropies/accuracies -> Eq. 38 weights are exactly [0.5, 0.5]
+    out = nested_aggregate(g, pool, [ps, pl], ["small", "large"],
+                           [1.0, 1.0], [0.5, 0.5])
+    lg = out["large"]
+    c0 = np.asarray(lg["conv"][0])
+    both = (0.5 * np.asarray(ps["conv"][0])
+            + 0.5 * np.asarray(pl["conv"][0])[:, :, :, :16])
+    np.testing.assert_allclose(c0[:, :, :, :16], both, atol=1e-6, rtol=1e-5)
+    # channels 16.. of large's conv0: only the large client covers them
+    np.testing.assert_allclose(c0[:, :, :, 16:],
+                               np.asarray(pl["conv"][0])[:, :, :, 16:],
+                               atol=1e-6, rtol=1e-5)
+    # large's third conv stage: small has no stage 2 at all
+    np.testing.assert_allclose(np.asarray(lg["conv"][2]),
+                               np.asarray(pl["conv"][2]),
+                               atol=1e-6, rtol=1e-5)
+
+
+def test_nested_aggregate_uncovered_entries_keep_global():
+    """Target entries no client covers (small's fc1 rows outside large's
+    3x3 grid, when only a large client reports) keep the global value."""
+    pool = {"small": SMALL, "large": LARGE}
+    g = {"small": _rand_params(SMALL, 40), "large": _rand_params(LARGE, 41)}
+    pl = _rand_params(LARGE, 42)
+    out = nested_aggregate(g, pool, [pl], ["large"], [1.0], [0.5])
+    fc1 = np.asarray(out["small"]["fc1"])
+    row_out = (5 * 7 + 5) * 32 + 3          # h=5 >= large's 3x3 grid
+    np.testing.assert_array_equal(fc1[row_out],
+                                  np.asarray(g["small"]["fc1"])[row_out])
+    row_in = (1 * 7 + 2) * 32 + 3
+    row_l = (1 * 3 + 2) * 128 + 3
+    np.testing.assert_allclose(fc1[row_in, :64],
+                               np.asarray(pl["fc1"])[row_l, :64],
+                               atol=1e-6, rtol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# server / engine / sim integration
+# --------------------------------------------------------------------- #
+SIM_CFG = FLSimConfig(dataset="mnist", n_train=300, n_test=80, n_clients=6,
+                      k_per_round=3, batches_per_epoch=1, default_epochs=2,
+                      batch_size=16, size_names=("small", "large"))
+
+
+def test_unknown_aggregation_rejected():
+    with pytest.raises(ValueError):
+        HAPFLServer(FLEnvironment(SIM_CFG), aggregation="telepathy")
+
+
+def test_cross_size_round_engine_parity():
+    """Cross-size rounds still group client training into per-size cohorts:
+    the batched engine and the sequential reference agree under
+    aggregation='cross_size' exactly as they do under 'group'."""
+    a = HAPFLServer(FLEnvironment(SIM_CFG), seed=3, engine="sequential",
+                    aggregation="cross_size")
+    b = HAPFLServer(FLEnvironment(SIM_CFG), seed=3, engine="batched",
+                    aggregation="cross_size")
+    rec_a, rec_b = a.run_round(), b.run_round()
+    assert rec_a.sizes == rec_b.sizes
+    assert rec_a.intensities == rec_b.intensities
+    for s in a.global_by_size:
+        for la, lb in zip(_leaves(a.global_by_size[s]),
+                          _leaves(b.global_by_size[s])):
+            np.testing.assert_allclose(la, lb, atol=1e-5, rtol=1e-4)
+
+
+def test_cross_size_updates_every_size_group():
+    """One round whose cohort misses a size still refreshes that size's
+    global under cross_size (the starving-group fix); group leaves it."""
+    env = FLEnvironment(SIM_CFG)
+    srv = HAPFLServer(env, seed=0, aggregation="cross_size",
+                      use_ppo1=False, use_ppo2=False)
+    # use_ppo1=False allocates every client the first pool size ("small")
+    before = {s: _leaves(srv.global_by_size[s]) for s in env.pool}
+    srv.run_round()
+    rec = srv.history[-1]
+    assert set(rec.sizes) == {"small"}
+    after = {s: _leaves(srv.global_by_size[s]) for s in env.pool}
+    for s in env.pool:
+        assert any(not np.array_equal(x, y)
+                   for x, y in zip(before[s], after[s])), s
+
+
+def test_sim_policies_thread_staleness_into_nested_path():
+    """Buffered (semi-async) scheduling over a cross_size server: stale
+    cross-wave updates flow through nested_aggregate without error and the
+    staleness tags survive into the aggregation records."""
+    srv = HAPFLServer(FLEnvironment(SIM_CFG), seed=1,
+                      aggregation="cross_size", use_ppo1=False,
+                      use_ppo2=False)
+    res = EventScheduler(srv, BufferedPolicy(buffer_m=2),
+                         eval_accuracy=False).run(waves=None, max_updates=8)
+    stal = [s for r in res.records for s in r.staleness]
+    assert res.n_updates == 8
+    assert max(stal) > 0
