@@ -1,0 +1,118 @@
+"""Communication-efficiency comparison: update codecs x scheduling policies
+(DESIGN.md §13), emitted to artifacts/bench/comm_modes.json.
+
+The 10-client async-policy sweep of bench_latency, re-run with the uplink
+priced and *used* per codec: `HAPFLServer(codec=...)` round-trips every
+update through the codec (so accuracy reflects the lossy wire) and
+`CommModel(codec=...)` shrinks the simulator's upload events to the
+codec's wire bytes. Links are NB-IoT-class (mean 0.5 Mbps uplink,
+10x disparity, 4x faster downlink), the regime the paper's IoT fleets
+live in — dense float32 uploads there cost as much time as local
+training, which is exactly what a codec can win back.
+
+Per (codec, policy) row: uplink/downlink bytes, simulated
+time-to-target-accuracy (computed from the accuracy curve over a fixed
+update budget, so final_acc stays comparable), straggling (turnaround
+spread — includes link time when a CommModel is present), final accuracy,
+and reductions vs the dense (identity) baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit, save_json
+from repro.comm import make_codec
+from repro.core.latency import make_comm_model
+from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+from repro.sim import EventScheduler, make_policy
+
+# top-k at 8% with biases/small layers dense (DGC convention) keeps the
+# fixed-budget accuracy at or above dense while moving ~10x fewer bytes
+CODECS = ({"name": "identity"}, {"name": "int8"}, {"name": "int4"},
+          {"name": "topk", "ratio": 0.08, "dense_min": 256},
+          {"name": "topk+int8", "ratio": 0.08, "dense_min": 256})
+POLICIES = ({"name": "sync"}, {"name": "buffered", "buffer_m": 3})
+
+
+def _first_crossing(acc_curve, target):
+    for t, acc in acc_curve:
+        if acc >= target:
+            return round(float(t), 3)
+    return None
+
+
+def run_codec_comparison(max_updates: int = 200, target_acc: float = 0.4,
+                         seed: int = 0, mean_mbps: float = 0.5,
+                         codecs=CODECS, policies=POLICIES,
+                         eval_every: int = 1,
+                         artifact_name: str = "comm_modes"):
+    """Codec x policy sweep under the bench_latency 10x cohort. RL is
+    frozen so every run schedules the identical fixed workload; the only
+    differences are what the wire carries (codec) and when updates fold in
+    (policy). The run consumes the full update budget (no early stop), so
+    final_acc compares like for like; time-to-target is read off the
+    accuracy curve afterwards."""
+    out = {}
+    for cspec in codecs:
+        cspec = dict(cspec)
+        codec = make_codec(cspec.pop("name"), **cspec)
+        rows = {}
+        for pspec in policies:
+            pspec = dict(pspec)
+            pol = make_policy(pspec.pop("name"), **pspec)
+            cfg = FLSimConfig(dataset="mnist", n_train=800, n_test=200,
+                              batches_per_epoch=2, default_epochs=8,
+                              lr=2e-2, batch_size=8, max_speed_ratio=10.0,
+                              seed=seed)
+            env = FLEnvironment(cfg)
+            srv = HAPFLServer(env, seed=seed, use_ppo1=False,
+                              use_ppo2=False, codec=codec)
+            comm = make_comm_model(
+                {s: float(c.num_params()) for s, c in env.pool.items()},
+                float(env.lite_cfg.num_params()), cfg.n_clients,
+                mean_mbps=mean_mbps, seed=seed, codec=codec,
+                model_tensors={s: c.num_tensors()
+                               for s, c in env.pool.items()},
+                lite_tensors=env.lite_cfg.num_tensors())
+            sched = EventScheduler(srv, pol, comm=comm,
+                                   eval_every=eval_every)
+            with Timer() as t:
+                res = sched.run(waves=None, max_updates=max_updates)
+            row = res.summary()
+            row["time_to_target"] = _first_crossing(res.acc_curve,
+                                                    target_acc)
+            row["target_acc"] = target_acc
+            row["wall_seconds"] = round(t.seconds, 1)
+            rows[pol.name] = row
+        out[codec.name] = rows
+    dense = out.get("identity", {})
+    for cname, rows in out.items():
+        for pname, row in rows.items():
+            base = dense.get(pname, {})
+            ub, cb = base.get("up_bytes"), row.get("up_bytes")
+            row["uplink_reduction_x"] = (round(ub / cb, 2)
+                                         if ub and cb else None)
+            bt, ct = base.get("time_to_target"), row.get("time_to_target")
+            row["speedup_vs_dense"] = (round(bt / ct, 2)
+                                       if bt and ct else None)
+            row["acc_delta_vs_dense"] = (
+                round(row["final_acc"] - base["final_acc"], 4)
+                if base else None)
+            emit(f"comm_{cname}_{pname}",
+                 row["wall_seconds"] * 1e6 / max(row["n_aggregations"], 1),
+                 f"upx={row['uplink_reduction_x']}"
+                 f"_ttt={row['time_to_target']}"
+                 f"_acc={row['final_acc']}")
+    save_json(artifact_name, out)
+    return out
+
+
+def main(max_updates: int = 200, target_acc: float = 0.4, seed: int = 0,
+         codecs=CODECS, policies=POLICIES,
+         artifact_name: str = "comm_modes"):
+    return run_codec_comparison(max_updates=max_updates,
+                                target_acc=target_acc, seed=seed,
+                                codecs=codecs, policies=policies,
+                                artifact_name=artifact_name)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ artifacts/bench/. Budget knobs keep the default full run CPU-tractable;
   fig4-21     bench_accuracy    accuracy/loss vs FedAvg/FedProx (+Tab III/IV)
   (ours)      bench_accuracy    cross_size: group vs nested aggregation
   fig22/23    bench_latency     straggling latency + overall training time
+  (ours)      bench_comm        update codecs x scheduling policies
   fig24       bench_scalability 20/100-client model-allocation scaling
   fig25       bench_ablation    fixed-size / fixed-intensity ablations
   (ours)      bench_roofline    dry-run roofline table
@@ -25,7 +26,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="tiny budgets (CI smoke)")
     ap.add_argument("--only", default="",
-                    help="comma list: rl,accuracy,cross_size,latency,"
+                    help="comma list: rl,accuracy,cross_size,latency,comm,"
                          "scalability,ablation,roofline,kernels")
     ap.add_argument("--datasets", default="mnist",
                     help="comma list for accuracy bench")
@@ -75,6 +76,17 @@ def main() -> None:
             n_train=800 if q else 2000, n_test=200 if q else 400,
             default_epochs=4 if q else 8,
             artifact_name="cross_size_quick" if q else "cross_size"))
+    if want("comm"):
+        from benchmarks import bench_comm
+        # quick mode writes comm_modes_quick.json: the committed
+        # artifacts/bench/comm_modes.json is the full-budget codec sweep
+        # and must not be clobbered by a smoke run (same as cross_size)
+        run("comm", lambda: bench_comm.main(
+            max_updates=24 if q else 200,
+            codecs=(({"name": "identity"},
+                     {"name": "topk+int8", "ratio": 0.08, "dense_min": 256})
+                    if q else bench_comm.CODECS),
+            artifact_name="comm_modes_quick" if q else "comm_modes"))
     if want("scalability"):
         from benchmarks import bench_scalability
         run("scalability", lambda: bench_scalability.main(

@@ -1,0 +1,26 @@
+"""Communication-efficiency subsystem (DESIGN.md §13).
+
+Quantized + sparsified update codecs with error feedback, turning the
+simulator's wire-byte model from a constant (`params * 4`) into a lever:
+
+  quantize  — per-tensor affine int8/int4 with counter-seeded stochastic
+              rounding (pure in (seed, client, round) — the latency-jitter
+              purity convention, so sync and event-driven runs agree)
+  sparsify  — deterministic magnitude top-k selection / densification
+  codec     — the `Codec` protocol (encode / decode / wire_bytes) and the
+              identity, int8, int4, topk, topk+int8 instances; lossy
+              codecs compress the delta from the dispatch-time global with
+              per-client error-feedback residuals
+
+Wired into the stack: `CommModel(codec=...)` prices upload/download
+events by codec wire bytes, `HAPFLServer(codec=...)` round-trips every
+client update through the codec before aggregation (EF state lives on
+the server beside the PPO state), and `benchmarks/bench_comm.py` sweeps
+the codecs across scheduling policies.
+"""
+from repro.comm.codec import (BYTES_F32, CODEC_NAMES, Codec, DensePayload,
+                              EncodedUpdate, IdentityCodec, QuantCodec,
+                              TopKCodec, TopKPayload, make_codec)
+from repro.comm.quantize import (QuantTensor, counter_uniform, dequantize,
+                                 quantize)
+from repro.comm.sparsify import densify, topk_count, topk_select

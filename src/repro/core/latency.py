@@ -140,42 +140,87 @@ class CommModel:
     The payload a HAPFL client moves each round is its size-category local
     model plus the LiteModel (mutual KD ships both); baselines without a
     LiteModel pass include_lite=False.
+
+    `codec` (a repro.comm Codec, or None for dense float32) makes the
+    accounting codec-aware: uploads are priced at the codec's analytic
+    wire bytes — `codec.wire_bytes(n_params, n_tensors)` — instead of
+    `params * bytes_per_param`. Downloads stay dense (the server
+    broadcasts full globals) unless `codec_downlink=True`. The per-size
+    tensor counts feed the codec's per-tensor overheads (affine maps,
+    top-k counts); omitted sizes are priced with zero overhead.
     """
     model_bytes: Dict[str, float]
     lite_bytes: float
     up_bw: List[float]
     down_bw: List[float]
+    codec: Optional[object] = None           # repro.comm.Codec
+    codec_downlink: bool = False
+    bytes_per_param: float = 4.0
+    model_tensors: Dict[str, int] = field(default_factory=dict)
+    lite_tensors: int = 0
 
-    def payload_bytes(self, size_name: str, include_lite: bool = True) -> float:
-        return self.model_bytes[size_name] + (self.lite_bytes if include_lite
-                                              else 0.0)
+    def __post_init__(self):
+        # codecs define their wire format against a float32 dense baseline
+        # (4 B/param); pricing them against a different dense width would
+        # silently skew every reduction ratio — reject it up front
+        if self.codec is not None and self.bytes_per_param != 4.0:
+            raise ValueError("codec-aware accounting assumes float32 dense "
+                             f"(bytes_per_param=4), got {self.bytes_per_param}")
+
+    def _coded_bytes(self, dense: float, n_tensors: int) -> float:
+        return self.codec.wire_bytes(dense / self.bytes_per_param, n_tensors)
+
+    def payload_bytes(self, size_name: str, include_lite: bool = True,
+                      direction: str = "up") -> float:
+        if self.codec is None or (direction == "down"
+                                  and not self.codec_downlink):
+            return self.model_bytes[size_name] + (self.lite_bytes
+                                                  if include_lite else 0.0)
+        total = self._coded_bytes(self.model_bytes[size_name],
+                                  self.model_tensors.get(size_name, 0))
+        if include_lite:
+            total += self._coded_bytes(self.lite_bytes, self.lite_tensors)
+        return total
 
     def upload_time(self, client: int, size_name: str,
                     include_lite: bool = True) -> float:
-        return self.payload_bytes(size_name, include_lite) / self.up_bw[client]
+        return (self.payload_bytes(size_name, include_lite, "up")
+                / self.up_bw[client])
 
     def download_time(self, client: int, size_name: str,
                       include_lite: bool = True) -> float:
-        return self.payload_bytes(size_name,
-                                  include_lite) / self.down_bw[client]
+        return (self.payload_bytes(size_name, include_lite, "down")
+                / self.down_bw[client])
 
 
 def make_comm_model(model_params: Dict[str, float], lite_params: float,
                     n_clients: int, mean_mbps: float = 20.0,
                     bw_ratio: float = 10.0, down_up_ratio: float = 4.0,
-                    bytes_per_param: float = 4.0, seed: int = 0) -> CommModel:
+                    bytes_per_param: float = 4.0, seed: int = 0,
+                    codec=None, codec_downlink: bool = False,
+                    model_tensors: Optional[Dict[str, int]] = None,
+                    lite_tensors: int = 0) -> CommModel:
     """Uplinks log-spaced across `bw_ratio` (mirroring the compute-speed
     disparity), shuffled independently of compute speed; downlinks are
-    `down_up_ratio` faster (typical asymmetric last-mile links)."""
+    `down_up_ratio` faster (typical asymmetric last-mile links).
+
+    `codec` may be a repro.comm Codec or a codec name ("topk+int8", ...);
+    see CommModel for how it changes the payload accounting."""
     rng = np.random.default_rng(seed + 1013)
     up = np.geomspace(1.0, bw_ratio, n_clients)
     rng.shuffle(up)
     up = up * (mean_mbps * 1e6 / 8.0) / up.mean()   # bytes/sec, given mean
+    if isinstance(codec, str):
+        from repro.comm import make_codec   # lazy: keep core comm-free
+        codec = make_codec(codec)
     return CommModel(
         model_bytes={s: p * bytes_per_param for s, p in model_params.items()},
         lite_bytes=lite_params * bytes_per_param,
         up_bw=[float(b) for b in up],
-        down_bw=[float(b * down_up_ratio) for b in up])
+        down_bw=[float(b * down_up_ratio) for b in up],
+        codec=codec, codec_downlink=codec_downlink,
+        bytes_per_param=bytes_per_param,
+        model_tensors=dict(model_tensors or {}), lite_tensors=lite_tensors)
 
 
 class AvailabilityModel:

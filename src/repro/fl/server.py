@@ -70,6 +70,7 @@ class WavePlan:
     client_params: List[Dict] = field(default_factory=list)
     accs_local: List[float] = field(default_factory=list)
     accs_lite: List[float] = field(default_factory=list)
+    wire_bytes: List[float] = field(default_factory=list)  # per-client uplink
 
 
 class HAPFLServer:
@@ -77,13 +78,28 @@ class HAPFLServer:
                  use_ppo1: bool = True, use_ppo2: bool = True,
                  weighted_agg: bool = True,
                  lr_ppo1: float = 2e-3, lr_ppo2: float = 3e-4,
-                 engine: str = "auto", aggregation: str = "group"):
+                 engine: str = "auto", aggregation: str = "group",
+                 codec=None):
         # paper Table II: lr1=0.02 — unstable for Adam on our tiny actor
         # (PPO1 reward degrades); 2e-3 learns cleanly (DESIGN.md §8).
         if engine not in ("auto", "batched", "sequential"):
             raise ValueError(f"unknown engine {engine!r}")
         if aggregation not in ("group", "cross_size"):
             raise ValueError(f"unknown aggregation {aggregation!r}")
+        # update codec (repro.comm, DESIGN.md §13): every client update is
+        # round-tripped through it before aggregation sees it. None skips
+        # the round trip entirely; "identity" takes it but passes the leaf
+        # arrays through untouched — both are bit-identical to the legacy
+        # server (pinned in tests/test_comm_server.py).
+        if codec is not None:
+            from repro.comm import make_codec
+            codec = make_codec(codec)
+        self.codec = codec
+        self.codec_seed = seed
+        # error-feedback residuals, keyed (client, kind, size) — "local"
+        # trees change shape when PPO1 reassigns sizes, so each (client,
+        # size) pair carries its own residual; "lite" is homogeneous
+        self._ef: Dict = {}
         if engine == "auto":
             # batching wins when per-step compute is small (dispatch-bound
             # small batches) or the backend has parallel hardware; at large
@@ -226,6 +242,7 @@ class HAPFLServer:
                 self._client_train(c, s, tau)
                 for c, s, tau in zip(plan.clients, plan.sizes,
                                      plan.intensities)]
+        self._encode_wave(plan)
         if eval_accuracy:
             plan.accs_local = [
                 env.client_test_accuracy(p["local"], env.pool[s], c)
@@ -238,6 +255,38 @@ class HAPFLServer:
             plan.accs_local = [0.0] * m
             plan.accs_lite = [0.0] * m
         return plan
+
+    def _encode_wave(self, plan: WavePlan) -> None:
+        """Round-trip the wave's trained params through the update codec:
+        encode each client's {local, lite} delta against the dispatch-time
+        globals (train_wave runs at dispatch, so the current globals ARE
+        the reference the client trained from), decode immediately, and
+        replace `plan.client_params` with the wire-faithful result — every
+        downstream consumer (accuracy eval, all three apply_updates
+        branches, group or cross_size) then sees exactly what survived the
+        wire. Error-feedback residuals persist in self._ef across rounds;
+        per-client wire bytes land in plan.wire_bytes."""
+        if self.codec is None or not plan.client_params:
+            return
+        codec, wire = self.codec, []
+        for i, c in enumerate(plan.clients):
+            size = plan.sizes[i]
+            refs = (("local", size, self.global_by_size[size]),
+                    ("lite", "", self.lite_params))
+            dec, total = {}, 0.0
+            for kind, sz, ref in refs:
+                key = (c, kind, sz)
+                enc, state = codec.encode(
+                    plan.client_params[i][kind], ref, self._ef.get(key),
+                    seed=self.codec_seed, client=c,
+                    round_idx=plan.round_idx, tag=kind)
+                if state is not None:
+                    self._ef[key] = state
+                dec[kind] = codec.decode(enc, ref)
+                total += enc.wire_bytes
+            plan.client_params[i] = dec
+            wire.append(total)
+        plan.wire_bytes = wire
 
     def wave_updates(self, plan: WavePlan,
                      indices: Optional[Sequence[int]] = None,

@@ -1,0 +1,11 @@
+"""Launch tooling for the scaled-up substrate: device meshes (`mesh`),
+logical sharding axes/specs (`axes`, `specs`, `sharding`), dry-run + HLO
+traffic analysis (`dryrun`, `hlo_analysis`, `roofline_fixup`), config
+validation (`validate`), and the train/serve entry points (`train`,
+`serve`).
+
+Submodules are imported lazily by consumers (several pull in the full
+model/optimizer stack); this file exists so `repro.launch` is a regular
+package like every other subpackage rather than an implicit namespace
+package — `make lint`'s import smoke covers it.
+"""

@@ -28,6 +28,12 @@ class CNNConfig:
         w = self.in_shape[1] // (2 ** len(self.channels))
         return max(h, 1), max(w, 1), self.channels[-1]
 
+    def num_tensors(self) -> int:
+        """Leaf-tensor count of an init_cnn pytree: (kernel, bias) per conv
+        stage + fc1/fc1_b/fc2/fc2_b. Feeds the update codecs' per-tensor
+        wire-byte overheads (repro.comm, CommModel.model_tensors)."""
+        return 2 * len(self.channels) + 4
+
     def num_params(self) -> int:
         c_in = self.in_shape[2]
         total = 0

@@ -62,6 +62,8 @@ class SimResult:
     mean_straggling: float
     final_acc: float
     time_to_target: Optional[float]
+    up_bytes: float = 0.0          # wire bytes of updates that arrived
+    down_bytes: float = 0.0        # wire bytes of dispatched broadcasts
     acc_curve: List[Tuple[float, float]] = field(default_factory=list)
     records: List[AggRecord] = field(default_factory=list)
 
@@ -78,6 +80,8 @@ class SimResult:
             "final_acc": round(self.final_acc, 4),
             "time_to_target": (None if self.time_to_target is None
                                else round(self.time_to_target, 3)),
+            "up_bytes": round(self.up_bytes, 1),
+            "down_bytes": round(self.down_bytes, 1),
         }
 
 
@@ -114,6 +118,8 @@ class EventScheduler:
         self.n_updates = 0
         self.n_dropped = 0
         self.n_assessed = 0
+        self.up_bytes = 0.0            # counted at ARRIVAL: bytes that made it
+        self.down_bytes = 0.0          # counted at dispatch: broadcast bytes
         self._waves: Dict[int, Dict] = {}
         self._wave_count = 0
         self._open_waves = 0
@@ -163,6 +169,9 @@ class EventScheduler:
             down = (self.comm.download_time(c, plan.sizes[i])
                     if self.comm else 0.0)
             up = self.comm.upload_time(c, plan.sizes[i]) if self.comm else 0.0
+            if self.comm:
+                self.down_bytes += self.comm.payload_bytes(plan.sizes[i],
+                                                           direction="down")
             # offsets are computed clock-free (down=up=0 reduces to the
             # legacy assess+local, bit for bit) and only then anchored at
             # self.t — `(t + off) - t` would drift a ulp and break parity
@@ -203,7 +212,13 @@ class EventScheduler:
         """Fold the listed (wave, index) updates into the globals and log
         an AggRecord. stale=False (sync/deadline: every update trained
         against the current globals) keeps the legacy Eq. 38 weights
-        byte-identical — staleness tagging alone would renormalize them."""
+        byte-identical — staleness tagging alone would renormalize them.
+
+        The logged straggling spread is over local training times in the
+        legacy (comm=None) setting; with a CommModel it is over the full
+        turnaround offsets (download + assess + local + upload), so slow
+        *links* register as straggling just like slow compute — the spread
+        an update codec can actually shrink."""
         pol = self.policy
         updates, lts, stals = [], [], []
         for w, i in entries:
@@ -212,7 +227,8 @@ class EventScheduler:
             if not self.latency_only:
                 updates += self.server.wave_updates(plan, [i], staleness=tau)
             stals.append(0 if tau is None else tau)
-            lts.append(plan.local_times[i])
+            lts.append(self._waves[w]["finish"][i] if self.comm
+                       else plan.local_times[i])
         if updates:
             self.server.apply_updates(
                 updates,
@@ -281,6 +297,9 @@ class EventScheduler:
         info["outstanding"].discard(i)
         info["arrived"].append((i, ev.time))
         self.n_updates += 1
+        if self.comm:
+            self.up_bytes += self.comm.payload_bytes(
+                info["plan"].sizes[i], direction="up")
         pol = self.policy
         if pol.name in ("buffered", "async"):
             self.buffer.append((w, i, ev.time))
@@ -383,4 +402,5 @@ class EventScheduler:
             n_assessed=self.n_assessed,
             mean_straggling=float(np.mean(stragg)) if stragg else 0.0,
             final_acc=float(final), time_to_target=self.time_to_target,
+            up_bytes=self.up_bytes, down_bytes=self.down_bytes,
             acc_curve=list(self.acc_curve), records=list(self.records))

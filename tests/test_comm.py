@@ -1,0 +1,284 @@
+"""Unit tests for the communication-efficiency subsystem (repro.comm):
+quantizer error bounds + purity, top-k selection, codec round trips,
+error-feedback residuals, wire-byte accounting, and the CommModel
+(bandwidth normalization, codec-aware payload pricing)."""
+import numpy as np
+import pytest
+
+from repro.comm import (CODEC_NAMES, IdentityCodec, QuantTensor, densify,
+                        dequantize, make_codec, quantize, topk_count,
+                        topk_select)
+from repro.core.latency import make_comm_model
+
+
+def _tree(seed=0, n=1000):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(n // 10, 10)).astype(np.float32) * 0.1,
+            "b": rng.normal(size=(10,)).astype(np.float32)}
+
+
+def _zeros_like(t):
+    return {k: np.zeros_like(v) for k, v in t.items()}
+
+
+# --------------------------------------------------------------------- #
+# quantize
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quantize_error_bounded_by_scale(bits):
+    x = np.random.default_rng(1).normal(size=(500,)).astype(np.float32)
+    qt = quantize(x, bits, 0, 1, 2)
+    err = np.abs(dequantize(qt) - x)
+    # stochastic rounding moves a value at most one level
+    assert err.max() <= qt.scale + 1e-6
+    # coarser grids have larger scale
+    assert qt.scale == pytest.approx(
+        (float(x.max()) - float(x.min())) / ((1 << bits) - 1))
+
+
+def test_quantize_is_unbiased_in_expectation():
+    x = np.full(20000, 0.3, np.float32)    # sits strictly between levels
+    qt = quantize(x, 4, 5, 6, 7)
+    # per-element errors are +-scale-ish; the mean shrinks ~1/sqrt(n)
+    assert abs(float(np.mean(dequantize(qt) - x))) < qt.scale * 0.05
+
+
+def test_quantize_constant_tensor_is_exact():
+    x = np.full((7, 3), 1.25, np.float32)
+    qt = quantize(x, 8, 1, 2, 3)
+    assert np.array_equal(dequantize(qt), x)
+    assert qt.scale == 1.0 and np.all(qt.q == 0)
+
+
+def test_quantize_counter_seeded_purity():
+    """The rounding draw is a pure function of the entropy tuple — same
+    tuple, same levels, in any call order; any component changes them."""
+    x = np.random.default_rng(2).normal(size=(300,)).astype(np.float32)
+    a = quantize(x, 8, 9, 1, 4)
+    quantize(x, 8, 0, 0, 0)               # interleaved unrelated call
+    b = quantize(x, 8, 9, 1, 4)
+    assert np.array_equal(a.q, b.q)
+    assert not np.array_equal(a.q, quantize(x, 8, 9, 1, 5).q)
+    assert not np.array_equal(a.q, quantize(x, 8, 9, 2, 4).q)
+
+
+def test_quantize_rejects_silly_bits():
+    with pytest.raises(ValueError):
+        quantize(np.ones(3, np.float32), 16, 0)
+
+
+# --------------------------------------------------------------------- #
+# sparsify
+# --------------------------------------------------------------------- #
+def test_topk_selects_largest_magnitudes():
+    x = np.array([0.1, -5.0, 0.0, 3.0, -0.2], np.float32)
+    idx, vals = topk_select(x, ratio=0.4)      # k = 2
+    assert idx.tolist() == [1, 3]
+    assert vals.tolist() == [-5.0, 3.0]
+    assert np.array_equal(densify(idx, vals, (5,)),
+                          np.array([0, -5, 0, 3, 0], np.float32))
+
+
+def test_topk_count_floors_and_caps():
+    assert topk_count(10, 0.05) == 1           # never empty
+    assert topk_count(10, 1.0) == 10
+    assert topk_count(1000, 0.05) == 50
+
+
+def test_topk_deterministic_tie_break():
+    x = np.array([1.0, -1.0, 1.0, 1.0], np.float32)
+    idx1, _ = topk_select(x, 0.5)
+    idx2, _ = topk_select(x.copy(), 0.5)
+    assert np.array_equal(idx1, idx2)
+    assert idx1.tolist() == [0, 1]             # stable: earliest indices win
+
+
+# --------------------------------------------------------------------- #
+# codecs
+# --------------------------------------------------------------------- #
+def test_identity_codec_is_bitwise_passthrough():
+    t = _tree()
+    c = IdentityCodec()
+    enc, state = c.encode(t, _zeros_like(t), None, seed=0, client=1,
+                          round_idx=2)
+    dec = c.decode(enc, _zeros_like(t))
+    assert state is None
+    for k in t:
+        assert dec[k] is t[k]                  # the very same arrays
+    assert enc.wire_bytes == 4.0 * (t["w"].size + t["b"].size)
+
+
+def test_make_codec_names_and_aliases():
+    for name in CODEC_NAMES:
+        assert make_codec(name).name == name
+    assert make_codec("topk_int8").name == "topk+int8"
+    assert make_codec("topk", ratio=0.2).ratio == 0.2
+    c = make_codec("int4")
+    assert make_codec(c) is c                  # instances pass through
+    with pytest.raises(ValueError):
+        make_codec("zip")
+    with pytest.raises(ValueError):
+        make_codec(c, ratio=0.1)
+    with pytest.raises(ValueError):
+        make_codec("int16")                    # unsupported width fails fast
+    with pytest.raises(ValueError):
+        make_codec("topk+int0")
+
+
+@pytest.mark.parametrize("name", ["int8", "int4", "topk", "topk+int8"])
+def test_exact_wire_bytes_match_analytic(name):
+    t = _tree()
+    c = make_codec(name)
+    enc, _ = c.encode(t, _zeros_like(t), None, seed=0, client=0, round_idx=0)
+    n = t["w"].size + t["b"].size
+    # top-k rounds k per tensor, the analytic form once over the total —
+    # they may differ by < 1 transmitted entry per tensor
+    slack = 2 * (4.0 + 4.0) if name.startswith("topk") else 1e-6
+    assert abs(enc.wire_bytes - c.wire_bytes(n, n_tensors=2)) <= slack
+
+
+def test_wire_byte_reduction_ratios():
+    n = 100_000
+    dense = make_codec("identity").wire_bytes(n)
+    assert dense == 4.0 * n
+    assert dense / make_codec("int8").wire_bytes(n, 8) == pytest.approx(
+        4.0, rel=0.01)
+    assert dense / make_codec("int4").wire_bytes(n, 8) == pytest.approx(
+        8.0, rel=0.01)
+    # the acceptance-bar composition: >= 8x including per-tensor overheads
+    assert dense / make_codec("topk+int8").wire_bytes(n, 8) >= 8.0
+
+
+def test_lossy_codec_roundtrip_reduces_to_reference_plus_delta():
+    t, ref = _tree(3), _tree(4)
+    c = make_codec("int8")
+    enc, state = c.encode(t, ref, None, seed=0, client=0, round_idx=0)
+    dec = c.decode(enc, ref)
+    leaf_order = sorted(t)             # tree_flatten sorts dict keys
+    for k in t:
+        # error bound: one quantization level of the delta's range
+        lvl = (np.abs(t[k] - ref[k]).max() * 2) / 255 + 1e-6
+        assert np.abs(dec[k] - t[k]).max() <= lvl
+        # residual is exactly what the wire lost
+        np.testing.assert_allclose(state[leaf_order.index(k)],
+                                   (t[k] - ref[k]) - (dec[k] - ref[k]),
+                                   atol=1e-6)
+
+
+def test_error_feedback_keeps_cumulative_error_bounded():
+    """Constant true delta, round after round. With EF the transmitted sum
+    tracks the true cumulative delta (every coordinate eventually wins the
+    top-k race); without EF the never-selected coordinates are lost at a
+    constant rate and the error grows linearly with rounds."""
+    rng = np.random.default_rng(7)
+    d = {"w": rng.normal(size=(40, 5)).astype(np.float32)}
+    ref = _zeros_like(d)
+    c = make_codec("topk", ratio=0.1)
+    rounds = 30
+    sent_ef = np.zeros_like(d["w"])
+    sent_no = np.zeros_like(d["w"])
+    state = None
+    for r in range(rounds):
+        enc, state = c.encode(d, ref, state, seed=0, client=0, round_idx=r)
+        sent_ef += c.decode(enc, ref)["w"]
+        enc2, _ = c.encode(d, ref, None, seed=0, client=0, round_idx=r)
+        sent_no += c.decode(enc2, ref)["w"]
+    truth = rounds * d["w"]
+    err_ef = np.abs(sent_ef - truth).max()
+    err_no = np.abs(sent_no - truth).max()
+    assert err_ef < err_no / 3
+    # EF residual stays bounded well below "everything was dropped"
+    assert np.abs(state[0]).max() <= np.abs(d["w"]).max() * rounds * 0.5
+    # ... and EF widens the transmitted support: coordinates that never
+    # win the race memorylessly do win it once their residual accumulates
+    assert np.count_nonzero(sent_ef) > np.count_nonzero(sent_no)
+
+
+def test_topk_dense_min_ships_small_leaves_exactly():
+    """Leaves at or under the dense_min floor bypass sparsification (the
+    DGC bias convention): reconstructed exactly, priced at 4 B/entry."""
+    t, ref = _tree(5), _zeros_like(_tree(5))
+    c = make_codec("topk+int8", ratio=0.05, dense_min=256)
+    enc, state = c.encode(t, ref, None, seed=0, client=0, round_idx=0)
+    dec = c.decode(enc, ref)
+    np.testing.assert_array_equal(dec["b"], t["b"])      # 10 <= 256: dense
+    assert np.abs(dec["w"] - t["w"]).max() > 0           # 1000 > 256: lossy
+    bi = sorted(t).index("b")
+    assert np.all(state[bi] == 0)                        # nothing lost
+    assert enc.payloads[bi].wire_bytes == 4.0 * t["b"].size
+
+
+def test_delta_codec_rejects_mismatched_trees():
+    t = _tree()
+    c = make_codec("int8")
+    with pytest.raises(ValueError):
+        c.encode(t, {"w": t["w"]}, None)
+    enc, state = c.encode(t, _zeros_like(t), None)
+    with pytest.raises(ValueError):
+        c.encode({"w": t["w"]}, {"w": t["w"]}, state)   # stale EF shape
+
+
+# --------------------------------------------------------------------- #
+# CommModel / make_comm_model (previously only covered via test_sim)
+# --------------------------------------------------------------------- #
+MODEL_PARAMS = {"small": 1e4, "large": 1e5}
+
+
+def test_make_comm_model_mean_bandwidth_normalization():
+    for mbps in (5.0, 20.0):
+        comm = make_comm_model(MODEL_PARAMS, 5e3, 12, mean_mbps=mbps,
+                               bw_ratio=10.0)
+        assert np.mean(comm.up_bw) == pytest.approx(mbps * 1e6 / 8.0)
+        # the spread spans the requested ratio
+        assert max(comm.up_bw) / min(comm.up_bw) == pytest.approx(10.0)
+
+
+def test_make_comm_model_down_up_ratio():
+    comm = make_comm_model(MODEL_PARAMS, 5e3, 6, down_up_ratio=3.0)
+    for u, d in zip(comm.up_bw, comm.down_bw):
+        assert d == pytest.approx(3.0 * u)
+
+
+def test_make_comm_model_seed_determinism():
+    a = make_comm_model(MODEL_PARAMS, 5e3, 8, seed=5)
+    b = make_comm_model(MODEL_PARAMS, 5e3, 8, seed=5)
+    c = make_comm_model(MODEL_PARAMS, 5e3, 8, seed=6)
+    assert a.up_bw == b.up_bw
+    assert a.up_bw != c.up_bw
+
+
+def test_comm_model_include_lite_payloads():
+    comm = make_comm_model(MODEL_PARAMS, 5e3, 4, bytes_per_param=4.0)
+    assert comm.payload_bytes("small", include_lite=False) == 4.0 * 1e4
+    assert comm.payload_bytes("small") == 4.0 * (1e4 + 5e3)
+    assert (comm.upload_time(2, "small")
+            > comm.upload_time(2, "small", include_lite=False))
+
+
+def test_comm_model_codec_aware_payloads():
+    codec = make_codec("int8")
+    comm = make_comm_model(MODEL_PARAMS, 5e3, 4, codec=codec,
+                           model_tensors={"small": 8}, lite_tensors=6)
+    # uplink priced by the codec, including per-tensor overheads
+    assert comm.payload_bytes("small", include_lite=False) == pytest.approx(
+        codec.wire_bytes(1e4, 8))
+    assert comm.payload_bytes("small") == pytest.approx(
+        codec.wire_bytes(1e4, 8) + codec.wire_bytes(5e3, 6))
+    # downlink stays dense unless codec_downlink
+    assert comm.payload_bytes("small", direction="down") == 4.0 * (1e4 + 5e3)
+    both = make_comm_model(MODEL_PARAMS, 5e3, 4, codec="int8",
+                           codec_downlink=True)
+    assert both.payload_bytes("small", direction="down") == pytest.approx(
+        both.payload_bytes("small", direction="up"))
+    # identity codec reproduces the dense accounting exactly
+    ident = make_comm_model(MODEL_PARAMS, 5e3, 4, codec="identity")
+    plain = make_comm_model(MODEL_PARAMS, 5e3, 4)
+    for s in MODEL_PARAMS:
+        assert ident.payload_bytes(s) == plain.payload_bytes(s)
+        for cl in range(4):
+            assert ident.upload_time(cl, s) == plain.upload_time(cl, s)
+    # codecs price against a float32 dense baseline; any other width is
+    # rejected rather than silently mispriced
+    with pytest.raises(ValueError):
+        make_comm_model(MODEL_PARAMS, 5e3, 4, codec="int8",
+                        bytes_per_param=2.0)

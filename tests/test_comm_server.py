@@ -1,0 +1,152 @@
+"""Codec integration with the HAPFL server + event scheduler: identity
+bit-exactness against the legacy paths (group and cross_size), EF state
+on the server, per-wave wire accounting, and codec-aware upload/download
+events in the simulator."""
+import jax
+import numpy as np
+import pytest
+
+from repro.comm import make_codec
+from repro.core.latency import make_comm_model
+from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+from repro.sim import BufferedPolicy, EventScheduler, SyncPolicy
+
+CFG = FLSimConfig(dataset="mnist", n_train=300, n_test=80, n_clients=8,
+                  k_per_round=4, batches_per_epoch=1, default_epochs=2,
+                  batch_size=16)
+
+
+def fresh_server(seed=3, **kw):
+    return HAPFLServer(FLEnvironment(CFG), seed=seed, **kw)
+
+
+def assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def _mnist_comm(codec=None, mean_mbps=0.5):
+    env = FLEnvironment(CFG)
+    return make_comm_model(
+        {s: float(c.num_params()) for s, c in env.pool.items()},
+        float(env.lite_cfg.num_params()), CFG.n_clients,
+        mean_mbps=mean_mbps, codec=codec,
+        model_tensors={s: c.num_tensors() for s, c in env.pool.items()},
+        lite_tensors=env.lite_cfg.num_tensors())
+
+
+# --------------------------------------------------------------------- #
+# identity codec == legacy server, bit for bit, on both aggregations
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("aggregation", ["group", "cross_size"])
+def test_identity_codec_bit_identical_to_legacy(aggregation):
+    legacy = fresh_server(aggregation=aggregation)
+    recs_a = legacy.run(2)
+    coded = fresh_server(aggregation=aggregation, codec="identity")
+    recs_b = coded.run(2)
+    assert_trees_equal(legacy.lite_params, coded.lite_params)
+    assert_trees_equal(legacy.global_by_size, coded.global_by_size)
+    for a, b in zip(recs_a, recs_b):
+        assert a.acc_lite == b.acc_lite
+        assert a.acc_by_size == b.acc_by_size
+        assert a.client_acc == b.client_acc
+        assert a.reward_ppo1 == b.reward_ppo1
+        assert a.reward_ppo2 == b.reward_ppo2
+    assert coded._ef == {}                     # identity keeps no residuals
+
+
+def test_codec_none_skips_roundtrip_entirely():
+    srv = fresh_server()
+    assert srv.codec is None
+    plan = srv.plan_wave()
+    srv.train_wave(plan)
+    assert plan.wire_bytes == []               # no accounting without a codec
+
+
+# --------------------------------------------------------------------- #
+# lossy codecs through the full server round
+# --------------------------------------------------------------------- #
+def test_lossy_codec_records_wire_bytes_and_ef():
+    srv = fresh_server(codec=make_codec("topk+int8", ratio=0.05))
+    plan = srv.plan_wave()
+    srv.train_wave(plan)
+    assert len(plan.wire_bytes) == len(plan.clients)
+    for i, (c, s) in enumerate(zip(plan.clients, plan.sizes)):
+        n = (srv.env.pool[s].num_params() + srv.env.lite_cfg.num_params())
+        assert 4.0 * n / plan.wire_bytes[i] >= 8.0     # >= 8x vs dense
+        assert (c, "local", s) in srv._ef
+        assert (c, "lite", "") in srv._ef
+    srv.apply_updates(srv.wave_updates(plan))          # decoded params fold in
+
+
+def test_ef_residuals_accumulate_across_rounds():
+    srv = fresh_server(codec=make_codec("topk", ratio=0.05))
+    srv.run(1)
+    before = {k: [np.array(x) for x in jax.tree_util.tree_leaves(v)]
+              for k, v in srv._ef.items()}
+    srv.run(2)                                 # more rounds touch EF again
+    changed = 0
+    for k, v in srv._ef.items():
+        if k in before:
+            after = jax.tree_util.tree_leaves(v)
+            if any(not np.array_equal(a, b)
+                   for a, b in zip(before[k], after)):
+                changed += 1
+    assert changed > 0
+    # residuals are the untransmitted remainder: nonzero for a 5% top-k
+    assert any(np.any(np.asarray(x) != 0)
+               for v in srv._ef.values()
+               for x in jax.tree_util.tree_leaves(v))
+
+
+def test_lossy_codec_works_under_cross_size_aggregation():
+    srv = fresh_server(aggregation="cross_size", codec="int8")
+    recs = srv.run(2)
+    assert all(np.isfinite(r.acc_lite) for r in recs)
+    for s, p in srv.global_by_size.items():
+        for leaf in jax.tree_util.tree_leaves(p):
+            assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+# --------------------------------------------------------------------- #
+# scheduler: codec-aware upload/download events and byte accounting
+# --------------------------------------------------------------------- #
+def test_scheduler_uplink_bytes_shrink_with_codec():
+    codec = make_codec("topk+int8", ratio=0.05)
+    results = {}
+    for name, cd in (("dense", None), ("coded", codec)):
+        srv = fresh_server(use_ppo1=False, use_ppo2=False)
+        sched = EventScheduler(srv, BufferedPolicy(buffer_m=2),
+                               comm=_mnist_comm(cd), latency_only=True)
+        results[name] = sched.run(waves=None, max_updates=16)
+    dense, coded = results["dense"], results["coded"]
+    assert dense.up_bytes > 0 and coded.up_bytes > 0
+    assert dense.up_bytes / coded.up_bytes >= 8.0
+    # downloads stay dense: same broadcast bytes per dispatch either way
+    assert (dense.down_bytes / dense.n_waves
+            == pytest.approx(coded.down_bytes / coded.n_waves))
+    # identical workload finishing earlier on thinner uplinks
+    assert coded.sim_time < dense.sim_time
+
+
+def test_scheduler_counts_bytes_only_with_comm_model():
+    srv = fresh_server(use_ppo1=False, use_ppo2=False)
+    res = EventScheduler(srv, SyncPolicy(), latency_only=True).run(waves=2)
+    assert res.up_bytes == 0.0 and res.down_bytes == 0.0
+    assert "up_bytes" in res.summary()
+
+
+def test_scheduler_comm_straggling_includes_link_time():
+    """With a CommModel, the logged straggling spread is over full
+    turnaround offsets — so bandwidth disparity registers even when
+    compute times are equal-ish, and a codec can shrink it."""
+    srv = fresh_server(use_ppo1=False, use_ppo2=False)
+    slow = _mnist_comm(None, mean_mbps=0.05)   # links dominate turnaround
+    r_dense = EventScheduler(srv, SyncPolicy(), comm=slow,
+                             latency_only=True).run(waves=3)
+    srv2 = fresh_server(use_ppo1=False, use_ppo2=False)
+    r_plain = EventScheduler(srv2, SyncPolicy(),
+                             latency_only=True).run(waves=3)
+    assert r_dense.mean_straggling > r_plain.mean_straggling
