@@ -12,9 +12,9 @@ test-slow:
 	PYTHONPATH=src $(PY) -m pytest -q --run-slow
 
 ## fast benchmark smoke: kernels + latency figures + engine throughput
-## + cross-size aggregation comparison + codec sweep
+## + cross-size aggregation comparison + codec sweep + service load
 bench-smoke:
-	$(PYPATH) $(PY) benchmarks/run.py --quick --only kernels,roofline,latency,cross_size,comm
+	$(PYPATH) $(PY) benchmarks/run.py --quick --only kernels,roofline,latency,cross_size,comm,serve
 
 ## bench-regression gate: fail if any policy's sync-relative time-to-target
 ## regressed >25% vs the committed baseline (see benchmarks/check_regression.py)
@@ -30,6 +30,6 @@ lint:
 	$(PY) -m compileall -q src tests benchmarks examples
 	PYTHONPATH=src $(PY) -c "import repro, repro.fl, repro.fl.batched, \
 repro.comm, repro.core, repro.core.nested, repro.data, repro.kernels, \
-repro.models, repro.launch, repro.optim, repro.serve, repro.sim, \
-repro.train"
+repro.models, repro.launch, repro.optim, repro.serve, repro.service, \
+repro.sim, repro.train"
 	@echo lint OK

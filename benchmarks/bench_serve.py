@@ -1,0 +1,118 @@
+"""Parameter-service load benchmark (DESIGN.md §14), emitted to
+artifacts/bench/serve_load.json.
+
+A Poisson client-arrival trace is replayed against a live `ParamService`
+under churn (AvailabilityModel on/off cycles): every event, a client
+either submits the update for its open ticket or requests a new dispatch;
+offline clients go silent and are expired by the deadline poll. Updates
+are synthesized (reference + counter-pure noise) so the measurement is
+the *service* — admission, PPO planning, codec encode/decode + EF,
+staleness-weighted streaming aggregation — not CNN training throughput.
+
+Per {policy} x {codec} row: sustained updates/sec over the steady-state
+window (after jit warmup), dispatch/submit p50/p99 wall latency, the
+staleness histogram, expiry/rejoin counts, and wire bytes. One extra row
+re-runs async+identity with periodic checkpointing enabled to price the
+durability path (checkpoint p50/p99 + its drag on updates/sec).
+"""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import emit, save_json
+from repro.core.latency import AvailabilityModel
+from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+from repro.service import LoadGenerator, ParamService, poisson_trace
+
+CONFIGS = (("async", "identity"), ("async", "topk+int8"),
+           ("buffered", "identity"), ("buffered", "topk+int8"))
+
+
+def _run_one(policy: str, codec: str, n_events: int, n_clients: int,
+             k_per_round: int, rate_hz: float, seed: int,
+             warmup_events: int, checkpoint_every=None):
+    cfg = FLSimConfig(dataset="mnist", n_clients=n_clients,
+                      k_per_round=k_per_round, n_train=16 * n_clients,
+                      n_test=128, batches_per_epoch=1, default_epochs=8,
+                      batch_size=16, max_speed_ratio=10.0, seed=seed)
+    env = FLEnvironment(cfg)
+    codec_kw = ({"ratio": 0.08, "dense_min": 256}
+                if codec.startswith("topk") else {})
+    from repro.comm import make_codec
+    srv = HAPFLServer(env, seed=seed, codec=make_codec(codec, **codec_kw))
+    # on/off churn cycles a few times over the trace horizon; deadlines sit
+    # at ~1.5x the mean per-client revisit interval so clients that churn
+    # away mid-ticket actually expire (the rejoin path gets exercised)
+    horizon = n_events / rate_hz
+    revisit = n_clients / rate_hz
+    av = AvailabilityModel(n_clients, mean_on=horizon / 4.0,
+                           mean_off=horizon / 10.0, seed=seed)
+    ckpt_dir = tempfile.mkdtemp(prefix="serve_ckpt_") \
+        if checkpoint_every else None
+    svc = ParamService(srv, policy=policy, availability=av,
+                       max_inflight=k_per_round,
+                       min_deadline=1.5 * revisit,
+                       checkpoint_dir=ckpt_dir,
+                       checkpoint_every=checkpoint_every)
+    trace = poisson_trace(n_events, n_clients, rate_hz, seed=seed)
+    gen = LoadGenerator(svc, trace, seed=seed)
+    gen.replay(stop=warmup_events)       # absorb jit compilation
+    svc.metrics.reset_window()
+    snap = gen.replay(start=warmup_events)
+    win = snap["window_counts"]
+    stal = {int(k): v for k, v in snap["staleness_hist"].items()}
+    n_stal = max(sum(stal.values()), 1)
+    row = {
+        "policy": policy, "codec": codec, "n_events": n_events,
+        "n_clients": n_clients, "updates_per_sec": snap["updates_per_sec"],
+        "aggregations_per_sec": snap["aggregations_per_sec"],
+        "wall_seconds": snap["window_wall_seconds"],
+        "dispatches": win.get("dispatch", 0),
+        "submits": win.get("submit", 0),
+        "aggregations": win.get("aggregate", 0),
+        "expired": win.get("expired", 0),
+        "rejoins": win.get("rejoin", 0),
+        "rejects_busy": win.get("reject_dispatch_busy", 0),
+        "rejects_offline": win.get("reject_dispatch_offline", 0),
+        "dispatch": snap["dispatch"], "submit": snap["submit"],
+        "checkpoint": snap["checkpoint"],
+        "staleness_mean": round(sum(k * v for k, v in stal.items())
+                                / n_stal, 3),
+        "staleness_max": max(stal) if stal else 0,
+        "staleness_hist": snap["staleness_hist"],
+        "up_bytes": snap["up_bytes"], "down_bytes": snap["down_bytes"],
+    }
+    return row
+
+
+def main(n_events: int = 1500, n_clients: int = 32, k_per_round: int = 8,
+         rate_hz: float = 2.0, seed: int = 0, configs=CONFIGS,
+         checkpoint_every: int = 25,
+         artifact_name: str = "serve_load"):
+    warmup = max(min(n_events // 5, 120), 30)
+    out = {}
+    for policy, codec in configs:
+        row = _run_one(policy, codec, n_events, n_clients, k_per_round,
+                       rate_hz, seed, warmup)
+        out[f"{policy}+{codec}"] = row
+    if checkpoint_every:
+        out["async+identity+ckpt"] = _run_one(
+            "async", "identity", n_events, n_clients, k_per_round, rate_hz,
+            seed, warmup, checkpoint_every=checkpoint_every)
+    # dense-relative wire reduction per policy
+    for key, row in out.items():
+        base = out.get(f"{row['policy']}+identity")
+        ub = base["up_bytes"] if base else None
+        row["uplink_reduction_x"] = (round(ub / row["up_bytes"], 2)
+                                     if ub and row["up_bytes"] else None)
+        d = row["dispatch"] or {}
+        emit(f"serve_{key}", (d.get("p99_ms") or 0.0) * 1e3,
+             f"ups={row['updates_per_sec']}"
+             f"_p50={d.get('p50_ms')}_p99={d.get('p99_ms')}"
+             f"_expired={row['expired']}")
+    save_json(artifact_name, out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

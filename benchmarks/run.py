@@ -9,6 +9,7 @@ artifacts/bench/. Budget knobs keep the default full run CPU-tractable;
   (ours)      bench_accuracy    cross_size: group vs nested aggregation
   fig22/23    bench_latency     straggling latency + overall training time
   (ours)      bench_comm        update codecs x scheduling policies
+  (ours)      bench_serve       parameter-service load (updates/sec, p99)
   fig24       bench_scalability 20/100-client model-allocation scaling
   fig25       bench_ablation    fixed-size / fixed-intensity ablations
   (ours)      bench_roofline    dry-run roofline table
@@ -27,7 +28,7 @@ def main() -> None:
                     help="tiny budgets (CI smoke)")
     ap.add_argument("--only", default="",
                     help="comma list: rl,accuracy,cross_size,latency,comm,"
-                         "scalability,ablation,roofline,kernels")
+                         "serve,scalability,ablation,roofline,kernels")
     ap.add_argument("--datasets", default="mnist",
                     help="comma list for accuracy bench")
     args = ap.parse_args()
@@ -87,6 +88,17 @@ def main() -> None:
                      {"name": "topk+int8", "ratio": 0.08, "dense_min": 256})
                     if q else bench_comm.CODECS),
             artifact_name="comm_modes_quick" if q else "comm_modes"))
+    if want("serve"):
+        from benchmarks import bench_serve
+        # quick mode writes serve_load_quick.json: the committed
+        # artifacts/bench/serve_load.json is the full-trace service load
+        # record and must not be clobbered by a smoke run
+        run("serve", lambda: bench_serve.main(
+            n_events=150 if q else 1500,
+            n_clients=16 if q else 32,
+            k_per_round=4 if q else 8,
+            checkpoint_every=10 if q else 25,
+            artifact_name="serve_load_quick" if q else "serve_load"))
     if want("scalability"):
         from benchmarks import bench_scalability
         run("scalability", lambda: bench_scalability.main(

@@ -1,1 +1,2 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint
+from repro.checkpoint.ckpt import (load_checkpoint, load_checkpoint_flat,
+                                   save_checkpoint)

@@ -2,6 +2,16 @@
 
 Works for params, optimizer states, and mixed pytrees of jnp/np arrays.
 bf16 arrays are stored via a uint16 view (npz has no bfloat16).
+
+Two restore APIs:
+
+* ``load_checkpoint(path, like)`` — restore into the structure of `like`
+  (leaf keys and treedef must match what was saved; a mismatch raises a
+  KeyError naming the missing/extra leaves).
+* ``load_checkpoint_flat(path)`` — the raw flat ``{path-key: array}``
+  mapping, no structure required. Callers that own variable-shaped state
+  (the parameter service's PPO buffers, EF residuals, open tickets) use
+  this and rebuild their trees from their own key scheme.
 """
 from __future__ import annotations
 
@@ -41,18 +51,64 @@ def save_checkpoint(path, tree, step: int = 0):
     Path(str(path) + ".json").write_text(json.dumps(meta))
 
 
-def load_checkpoint(path, like) -> Tuple[Any, int]:
-    """Restore into the structure of `like` (a pytree of arrays/structs)."""
+def _check_keys(path, want, have, want_name: str, have_name: str):
+    """Raise a KeyError naming the leaves on which two key sets disagree."""
+    missing = sorted(set(want) - set(have))
+    extra = sorted(set(have) - set(want))
+    if not missing and not extra:
+        return
+
+    def clip(keys):
+        shown = ", ".join(keys[:6])
+        return shown + (f", ... ({len(keys) - 6} more)" if len(keys) > 6
+                        else "")
+
+    parts = []
+    if missing:
+        parts.append(f"{len(missing)} {want_name} leaves absent from the "
+                     f"{have_name}: [{clip(missing)}]")
+    if extra:
+        parts.append(f"{len(extra)} {have_name} leaves not in the "
+                     f"{want_name}: [{clip(extra)}]")
+    raise KeyError(f"checkpoint {path!s} structure mismatch — "
+                   + "; ".join(parts))
+
+
+def _read(path) -> Tuple[Dict, Any]:
     meta = json.loads(Path(str(path) + ".json").read_text())
     data = np.load(str(path) + ".npz")
+    # the json meta and the npz are written together; disagreement means a
+    # torn/corrupted checkpoint and deserves a loud, named failure
+    _check_keys(path, meta["leaves"], data.files, "meta", "npz")
+    return meta, data
+
+
+def _undo_view(arr: np.ndarray, dtype_name: str):
+    if dtype_name == "bfloat16":
+        return jnp.asarray(arr.view(np.uint16)).view(jnp.bfloat16)
+    return jnp.asarray(arr)
+
+
+def load_checkpoint(path, like) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (a pytree of arrays/structs).
+
+    The flattened leaf keys of `like` must match the checkpoint exactly;
+    otherwise a KeyError names the missing/extra leaves instead of failing
+    on a bare npz lookup deep in the restore loop.
+    """
+    meta, data = _read(path)
     flat_like = _flatten(like)
-    restored = {}
-    for k in flat_like:
-        arr = data[k]
-        if meta["leaves"][k] == "bfloat16":
-            arr = jnp.asarray(arr.view(np.uint16)).view(jnp.bfloat16)
-        restored[k] = jnp.asarray(arr)
+    _check_keys(path, flat_like, data.files, "`like`", "checkpoint")
+    restored = {k: _undo_view(data[k], meta["leaves"][k]) for k in flat_like}
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
-    keys = list(_flatten(like).keys())
+    keys = list(flat_like.keys())
     new_leaves = [restored[k] for k in keys]
     return jax.tree_util.tree_unflatten(treedef, new_leaves), meta["step"]
+
+
+def load_checkpoint_flat(path) -> Tuple[Dict[str, Any], int]:
+    """Load every saved leaf as ``{path-key: array}`` without a `like`
+    structure (bf16 leaves are un-viewed back to bfloat16)."""
+    meta, data = _read(path)
+    return ({k: _undo_view(data[k], meta["leaves"][k]) for k in data.files},
+            meta["step"])

@@ -1,40 +1,104 @@
-"""Serving driver: batched greedy decode of any assigned arch (smoke scale on
-CPU; full configs lower under the production mesh via repro.launch.dryrun).
+"""Launch a long-running HAPFL parameter service and drive it with a
+Poisson client-arrival trace (repro.service; DESIGN.md §14).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --batch 2 \
-      --prompt-len 32 --new-tokens 16
+  PYTHONPATH=src python -m repro.launch.serve --n-clients 16 --events 400 \
+      --policy async --codec topk+int8 --checkpoint-dir /tmp/hapfl-ckpt
+
+If --checkpoint-dir already holds a checkpoint, the service resumes from
+the newest one instead of starting cold (kill the process mid-run and
+relaunch with the same flags to watch it continue where it left off).
+The metrics snapshot + structured event log land in --metrics-out.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
+from repro.comm import make_codec
+from repro.core.latency import AvailabilityModel
+from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+from repro.service import (LoadGenerator, ParamService, latest_checkpoint,
+                           poisson_trace)
 
-from repro.configs import get_config
-from repro.models.api import dummy_batch, init_model
-from repro.serve import ServeEngine
+
+def build_service(n_clients: int, k_per_round: int, policy: str,
+                  codec: str, seed: int, min_deadline: float,
+                  checkpoint_dir=None, checkpoint_every=None,
+                  churn: bool = True, horizon: float = 100.0):
+    cfg = FLSimConfig(dataset="mnist", n_clients=n_clients,
+                      k_per_round=k_per_round, n_train=16 * n_clients,
+                      n_test=128, batches_per_epoch=1, default_epochs=8,
+                      batch_size=16, seed=seed)
+    env = FLEnvironment(cfg)
+    c = None if codec in ("identity", "none") else make_codec(
+        codec, ratio=0.08, dense_min=256)
+    srv = HAPFLServer(env, seed=seed, codec=c)
+    av = AvailabilityModel(n_clients, mean_on=horizon / 4.0,
+                           mean_off=horizon / 10.0,
+                           seed=seed) if churn else None
+    return ParamService(srv, policy=policy, availability=av,
+                        max_inflight=k_per_round,
+                        min_deadline=min_deadline,
+                        checkpoint_dir=checkpoint_dir,
+                        checkpoint_every=checkpoint_every)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--n-clients", type=int, default=16)
+    ap.add_argument("--k-per-round", type=int, default=4)
+    ap.add_argument("--policy", default="async",
+                    choices=("async", "buffered"))
+    ap.add_argument("--codec", default="identity",
+                    help="identity | topk | int8 | topk+int8 | ...")
+    ap.add_argument("--events", type=int, default=400)
+    ap.add_argument("--rate-hz", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-churn", action="store_true",
+                    help="disable the on/off availability model")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=20,
+                    help="checkpoint every N aggregations (needs "
+                         "--checkpoint-dir)")
+    ap.add_argument("--metrics-out", default="artifacts/serve_metrics.json")
+    ap.add_argument("--eval", action="store_true",
+                    help="report global test accuracy when the trace ends")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).smoke()
-    params = init_model(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(cfg, params,
-                         max_len=args.prompt_len + args.new_tokens)
-    batch = dummy_batch(cfg, args.batch, args.prompt_len, with_labels=False)
-    t0 = time.time()
-    toks = engine.generate(batch, n_new=args.new_tokens)
-    dt = time.time() - t0
-    print(f"generated {toks.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
-    print(toks[0][:8], "...")
+    horizon = args.events / args.rate_hz
+    svc = build_service(
+        args.n_clients, args.k_per_round, args.policy, args.codec,
+        args.seed, min_deadline=1.5 * args.n_clients / args.rate_hz,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=(args.checkpoint_every
+                          if args.checkpoint_dir else None),
+        churn=not args.no_churn, horizon=horizon)
+
+    resume = (latest_checkpoint(args.checkpoint_dir)
+              if args.checkpoint_dir else None)
+    if resume:
+        svc.restore(resume)
+        print(f"resumed from {resume} at version {svc.version}")
+
+    trace = poisson_trace(args.events, args.n_clients, args.rate_hz,
+                          seed=args.seed)
+    snap = LoadGenerator(svc, trace, seed=args.seed).replay()
+
+    c = snap["counts"]
+    print(f"policy={args.policy} codec={args.codec} "
+          f"version={svc.version} waves={svc._wave_count}")
+    print(f"dispatched={c.get('dispatch', 0)} submitted={c.get('submit', 0)} "
+          f"aggregated={c.get('aggregate', 0)} expired={c.get('expired', 0)} "
+          f"rejoined={c.get('rejoin', 0)}")
+    print(f"updates/sec={snap['updates_per_sec']} "
+          f"dispatch={snap['dispatch']} staleness={snap['staleness_hist']}")
+    if args.checkpoint_dir:
+        path = svc.checkpoint()
+        print(f"final checkpoint: {path}")
+    if args.eval:
+        print("accuracy:", {k: round(v, 4)
+                            for k, v in svc.evaluate().items()})
+    svc.metrics.dump(args.metrics_out)
+    print(f"metrics + event log -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,126 @@
+"""Observability surface of the parameter service (DESIGN.md §14).
+
+One `ServiceMetrics` object per service: rolling counters (dispatches,
+submits, aggregations, expiries, rejects-by-reason), wire-byte totals, a
+staleness histogram, wall-clock latency reservoirs for the dispatch /
+submit / checkpoint paths, and a bounded per-event structured log. The
+deterministic part (counters, histogram, bytes) is checkpointed with the
+service so a restored run reports the same cumulative totals; wall-clock
+latencies and the event log are process-local observability and are not.
+
+`snapshot()` reports rates over the current *measurement window* —
+`reset_window()` restarts the window (after jit warmup, say) without
+discarding the cumulative counters.
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import Counter, deque
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+#: counters describing this *process* (how many times it checkpointed or
+#: restored), not the served stream — excluded from the checkpointed
+#: deterministic slice so a restored run's counters stay bit-identical
+#: to an uninterrupted one's
+LOCAL_COUNT_KEYS = ("checkpoint", "restore")
+
+
+def latency_stats(seconds: List[float]) -> Optional[Dict[str, float]]:
+    """p50/p99/mean/max of a latency reservoir, in milliseconds."""
+    if not seconds:
+        return None
+    ms = np.asarray(seconds) * 1e3
+    return {"n": int(ms.size),
+            "p50_ms": round(float(np.percentile(ms, 50)), 3),
+            "p99_ms": round(float(np.percentile(ms, 99)), 3),
+            "mean_ms": round(float(ms.mean()), 3),
+            "max_ms": round(float(ms.max()), 3)}
+
+
+class ServiceMetrics:
+    def __init__(self, event_log_size: int = 2000):
+        self.counts: Counter = Counter()
+        self.staleness: Counter = Counter()      # tau -> n updates applied
+        self.up_bytes = 0.0                      # ingested update wire bytes
+        self.down_bytes = 0.0                    # dispatched reference bytes
+        self.dispatch_s: List[float] = []        # wall secs per dispatch call
+        self.submit_s: List[float] = []          # wall secs per submit call
+        self.checkpoint_s: List[float] = []      # wall secs per checkpoint
+        self.events: deque = deque(maxlen=event_log_size)
+        self.reset_window()
+
+    # ------------------------------------------------------------------ #
+    def bump(self, name: str, n: int = 1) -> None:
+        self.counts[name] += n
+
+    def note_staleness(self, tau: int) -> None:
+        self.staleness[int(tau)] += 1
+
+    def log(self, now: float, kind: str, **fields) -> None:
+        self.events.append({"t": round(float(now), 6), "event": kind,
+                            **fields})
+
+    def reset_window(self) -> None:
+        """Restart the rate window: clears the latency reservoirs and the
+        throughput baseline, keeps cumulative counters/bytes/histogram."""
+        self._t0 = time.perf_counter()
+        self._window_base = Counter(self.counts)
+        self.dispatch_s.clear()
+        self.submit_s.clear()
+        self.checkpoint_s.clear()
+
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> Dict:
+        wall = time.perf_counter() - self._t0
+        win = {k: self.counts[k] - self._window_base.get(k, 0)
+               for k in self.counts}
+        ups = win.get("submit", 0)
+        return {
+            "counts": dict(self.counts),
+            "window_counts": win,
+            "window_wall_seconds": round(wall, 3),
+            "updates_per_sec": (round(ups / wall, 2) if wall > 0 else None),
+            "aggregations_per_sec": (round(win.get("aggregate", 0) / wall, 2)
+                                     if wall > 0 else None),
+            "up_bytes": round(self.up_bytes, 1),
+            "down_bytes": round(self.down_bytes, 1),
+            "staleness_hist": {str(k): int(v)
+                               for k, v in sorted(self.staleness.items())},
+            "dispatch": latency_stats(self.dispatch_s),
+            "submit": latency_stats(self.submit_s),
+            "checkpoint": latency_stats(self.checkpoint_s),
+        }
+
+    def dump(self, path) -> None:
+        """Write the snapshot + the structured event log as one artifact."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"snapshot": self.snapshot(), "events": list(self.events)},
+            indent=1, default=str))
+
+    # checkpointed (deterministic) slice ------------------------------- #
+    def deterministic_counts(self) -> Dict[str, int]:
+        """Counters that depend only on the served event stream (the
+        process-local LOCAL_COUNT_KEYS dropped) — the slice that must
+        match bit-for-bit across checkpoint/restore."""
+        return {k: int(v) for k, v in self.counts.items()
+                if k not in LOCAL_COUNT_KEYS}
+
+    def pack(self) -> Dict:
+        return {"counts": self.deterministic_counts(),
+                "staleness": {str(k): int(v)
+                              for k, v in self.staleness.items()},
+                "up_bytes": self.up_bytes, "down_bytes": self.down_bytes}
+
+    def unpack(self, state: Dict) -> None:
+        self.counts = Counter(state["counts"])
+        self.staleness = Counter({int(k): int(v)
+                                  for k, v in state["staleness"].items()})
+        self.up_bytes = float(state["up_bytes"])
+        self.down_bytes = float(state["down_bytes"])
+        self.reset_window()

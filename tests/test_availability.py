@@ -1,0 +1,89 @@
+"""AvailabilityModel: trace purity (query order can never change a
+trace) and on/off interval statistics of the exponential alternation."""
+import numpy as np
+
+from repro.core.latency import AvailabilityModel
+
+
+def _walk_intervals(av, client, horizon):
+    """Reconstruct a client's (on, off) interval lists through the public
+    API alone: alternate next_offline / next_online from t=0."""
+    on, off = [], []
+    t = 0.0
+    while t < horizon:
+        down = av.next_offline(client, t, horizon)
+        if down is None:
+            on.append(horizon - t)
+            break
+        on.append(down - t)
+        up = av.next_online(client, down + 1e-12)
+        off.append(up - down)
+        t = up
+    return on, off
+
+
+def test_all_clients_start_online():
+    av = AvailabilityModel(16, seed=3)
+    assert all(av.available(c, 0.0) for c in range(16))
+
+
+def test_query_order_does_not_change_trace():
+    """Counter purity: probing one model far in the future / out of order
+    yields exactly the same availability as fresh in-order queries."""
+    times = np.linspace(0.0, 5000.0, 400)
+    a = AvailabilityModel(6, mean_on=100.0, mean_off=30.0, seed=7)
+    a.available(3, 1e6)                       # force deep lazy extension
+    a.next_online(1, 4000.0)
+    got = [[a.available(c, t) for t in times] for c in range(6)]
+    b = AvailabilityModel(6, mean_on=100.0, mean_off=30.0, seed=7)
+    ref = [[b.available(c, t) for t in times] for c in range(6)]
+    assert got == ref
+
+
+def test_clients_are_independent_streams():
+    a = AvailabilityModel(4, mean_on=50.0, mean_off=50.0, seed=0)
+    traces = [tuple(a.available(c, t) for t in np.linspace(0, 2000, 200))
+              for c in range(4)]
+    assert len(set(traces)) == 4              # no two clients share a trace
+
+
+def test_transitions_consistent_with_available():
+    av = AvailabilityModel(3, mean_on=40.0, mean_off=15.0, seed=11)
+    for c in range(3):
+        down = av.next_offline(c, 0.0, 1e4)
+        assert down is not None
+        assert av.available(c, down - 1e-6)
+        assert not av.available(c, down + 1e-6)
+        up = av.next_online(c, down + 1e-6)
+        assert up > down
+        assert av.available(c, up + 1e-6)
+    # next_online is the identity for an already-online client
+    assert av.next_online(0, 0.0) == 0.0
+
+
+def test_interval_statistics_match_means():
+    """Pooled on/off interval means land near mean_on/mean_off (the
+    alternating-exponential contract), and both are far from each other."""
+    mean_on, mean_off = 80.0, 20.0
+    av = AvailabilityModel(40, mean_on=mean_on, mean_off=mean_off, seed=5)
+    on, off = [], []
+    for c in range(40):
+        o, f = _walk_intervals(av, c, horizon=20000.0)
+        on.extend(o[:-1])                     # last interval is censored
+        off.extend(f)
+    on, off = np.asarray(on), np.asarray(off)
+    assert on.size > 2000 and off.size > 2000
+    assert abs(on.mean() - mean_on) < 0.1 * mean_on
+    assert abs(off.mean() - mean_off) < 0.1 * mean_off
+    # exponential shape: std ~= mean (coefficient of variation ~ 1)
+    assert abs(on.std() / on.mean() - 1.0) < 0.15
+    assert abs(off.std() / off.mean() - 1.0) < 0.15
+
+
+def test_duty_cycle_matches_on_fraction():
+    mean_on, mean_off = 60.0, 30.0
+    av = AvailabilityModel(30, mean_on=mean_on, mean_off=mean_off, seed=9)
+    times = np.linspace(0.0, 30000.0, 1500)
+    frac = np.mean([[av.available(c, t) for t in times] for c in range(30)])
+    want = mean_on / (mean_on + mean_off)
+    assert abs(frac - want) < 0.05

@@ -1,0 +1,118 @@
+"""repro.checkpoint: round trips (mixed pytrees, bf16 view, PPO/optimizer
+state), the flat restore API, and the hardened structure-mismatch errors."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (load_checkpoint, load_checkpoint_flat,
+                              save_checkpoint)
+from repro.checkpoint.ckpt import _flatten
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.asarray(x).dtype == np.asarray(y).dtype
+        and np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def _mixed_tree():
+    return {
+        "w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        # (no float64 leaves: restore goes through jnp.asarray, which
+        # downcasts under jax's default x64-disabled mode)
+        "nested": {"b": np.float32(1.5), "ints": jnp.arange(4)},
+        "stack": [np.ones((3,), np.float32), {"deep": jnp.zeros((2, 2))}],
+        "mask": np.array([True, False, True]),
+    }
+
+
+def test_mixed_pytree_roundtrip(tmp_path):
+    tree = _mixed_tree()
+    save_checkpoint(tmp_path / "ck", tree, step=11)
+    restored, step = load_checkpoint(tmp_path / "ck", tree)
+    assert step == 11
+    assert _tree_equal(tree, restored)
+    # structure preserved, not just leaves
+    assert (jax.tree_util.tree_structure(tree)
+            == jax.tree_util.tree_structure(restored))
+
+
+def test_bf16_view_roundtrip(tmp_path):
+    tree = {"p": jnp.asarray(np.linspace(-3, 3, 16),
+                             jnp.bfloat16).reshape(4, 4),
+            "q": jnp.ones((3,), jnp.float32)}
+    save_checkpoint(tmp_path / "bf", tree)
+    restored, _ = load_checkpoint(tmp_path / "bf", tree)
+    assert restored["p"].dtype == jnp.bfloat16
+    assert jnp.array_equal(restored["p"], tree["p"])  # bit-exact via uint16
+    flat, _ = load_checkpoint_flat(tmp_path / "bf")
+    assert flat["p"].dtype == jnp.bfloat16
+    assert jnp.array_equal(flat["p"], tree["p"])
+
+
+def test_ppo_agent_state_roundtrip(tmp_path):
+    """The state the parameter service checkpoints for each PPO agent:
+    params + adamw optimizer state + experience buffer entries."""
+    from repro.core.ppo import PPOAgent, PPOConfig
+    agent = PPOAgent(PPOConfig(state_dim=4, kind="categorical_multihead"),
+                     jax.random.PRNGKey(0))
+    agent.store(np.ones(4), np.zeros(4, np.int32), -0.3, 1.25)
+    tree = {"params": agent.params, "opt": agent.opt_state,
+            "buffer": {"0": dict(agent.buffer[0])}}
+    save_checkpoint(tmp_path / "ppo", tree)
+    restored, _ = load_checkpoint(tmp_path / "ppo", tree)
+    assert _tree_equal(tree, restored)
+
+
+def test_flat_restore_matches_flatten_keys(tmp_path):
+    tree = _mixed_tree()
+    save_checkpoint(tmp_path / "ck", tree, step=3)
+    flat, step = load_checkpoint_flat(tmp_path / "ck")
+    assert step == 3
+    want = _flatten(tree)
+    assert set(flat) == set(want)
+    for k in want:
+        assert np.array_equal(np.asarray(flat[k]), np.asarray(want[k]))
+
+
+def test_missing_leaf_error_names_the_leaf(tmp_path):
+    save_checkpoint(tmp_path / "ck", {"a": jnp.ones(2)})
+    like = {"a": jnp.ones(2), "brand_new": {"w": jnp.zeros(3)}}
+    with pytest.raises(KeyError, match="brand_new/w"):
+        load_checkpoint(tmp_path / "ck", like)
+
+
+def test_extra_leaf_error_names_the_leaf(tmp_path):
+    save_checkpoint(tmp_path / "ck",
+                    {"a": jnp.ones(2), "stale": {"w": jnp.zeros(3)}})
+    with pytest.raises(KeyError, match="stale/w"):
+        load_checkpoint(tmp_path / "ck", {"a": jnp.ones(2)})
+
+
+def test_both_directions_reported_and_clipped(tmp_path):
+    saved = {f"old_{i}": jnp.ones(1) for i in range(10)}
+    save_checkpoint(tmp_path / "ck", saved)
+    like = {"new_leaf": jnp.ones(1)}
+    with pytest.raises(KeyError) as ei:
+        load_checkpoint(tmp_path / "ck", like)
+    msg = str(ei.value)
+    assert "new_leaf" in msg and "old_0" in msg
+    assert "more)" in msg              # long key lists are clipped, not dumped
+
+
+def test_torn_checkpoint_detected(tmp_path):
+    """Meta json and npz disagreeing = corrupted/torn write -> loud error."""
+    tree = {"a": jnp.ones(2), "b": jnp.zeros(3)}
+    save_checkpoint(tmp_path / "ck", tree)
+    meta = json.loads((tmp_path / "ck.json").read_text())
+    del meta["leaves"]["b"]
+    (tmp_path / "ck.json").write_text(json.dumps(meta))
+    with pytest.raises(KeyError, match="npz"):
+        load_checkpoint(tmp_path / "ck", tree)
+    with pytest.raises(KeyError, match="npz"):
+        load_checkpoint_flat(tmp_path / "ck")

@@ -1,0 +1,285 @@
+"""ParamService: streaming ingest semantics, admission/churn, codec wire
+accounting, observability, and the bit-identical checkpoint/restore pin
+(kill a run mid-trace, restore, continue -> byte-for-byte the state of the
+uninterrupted run, for identity AND topk+int8 codecs)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import make_codec
+from repro.core.latency import AvailabilityModel
+from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+from repro.service import (LoadGenerator, ParamService, latest_checkpoint,
+                           poisson_trace, synth_update)
+
+
+def _build(codec=None, policy="async", availability=None, seed=0, **kw):
+    cfg = FLSimConfig(dataset="mnist", n_train=200, n_test=60, n_clients=6,
+                     k_per_round=3, batches_per_epoch=1, default_epochs=2,
+                     batch_size=16, seed=seed)
+    env = FLEnvironment(cfg)
+    server = HAPFLServer(env, seed=seed, codec=codec)
+    kw.setdefault("min_deadline", 50.0)
+    return ParamService(server, policy=policy, availability=availability,
+                        **kw)
+
+
+def _teq(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------- #
+# dispatch / admission
+# ---------------------------------------------------------------------- #
+def test_dispatch_issues_ppo_assigned_tickets():
+    svc = _build()
+    tickets = svc.dispatch([0, 1], now=0.0)
+    assert [tk.client for tk in tickets] == [0, 1]
+    for tk in tickets:
+        assert tk.size in svc.server.env.pool
+        assert tk.intensity >= 1
+        assert tk.deadline >= 50.0
+        assert _teq(tk.ref_local, svc.server.global_by_size[tk.size])
+    assert svc.inflight == 2
+    assert svc.metrics.down_bytes > 0
+
+
+def test_admission_rejects_inflight_and_busy_and_offline():
+    av = AvailabilityModel(6, mean_on=20.0, mean_off=10.0, seed=0)
+    svc = _build(availability=av, max_inflight=2)
+    assert len(svc.dispatch([0, 1], now=0.0)) == 2
+    assert svc.dispatch(0, now=0.0) == []          # already holds a ticket
+    assert svc.dispatch(2, now=0.0) == []          # at capacity
+    c = svc.metrics.counts
+    assert c["reject_dispatch_inflight"] == 1
+    assert c["reject_dispatch_busy"] == 1
+    # an offline client is refused even with capacity free
+    t_off = av.next_offline(3, 0.0, 1e6)
+    svc.tickets.clear()
+    assert not av.available(3, t_off + 1e-3)
+    assert svc.dispatch(3, now=t_off + 1e-3) == []
+    assert c["reject_dispatch_offline"] == 1
+
+
+def test_submit_without_ticket_rejected():
+    svc = _build()
+    r = svc.submit(4, {"local": None, "lite": None}, now=0.0)
+    assert not r.accepted and r.reason == "no_ticket"
+    assert svc.metrics.counts["reject_submit_no_ticket"] == 1
+
+
+def test_non_streaming_policy_refused():
+    with pytest.raises(ValueError, match="sync"):
+        _build(policy="sync")
+
+
+# ---------------------------------------------------------------------- #
+# streaming ingest
+# ---------------------------------------------------------------------- #
+def test_async_applies_every_arrival():
+    svc = _build(policy="async")                   # buffer_m = 1
+    (tk,) = svc.dispatch(0, now=0.0)
+    before = svc.server.global_by_size[tk.size]
+    r = svc.submit(0, synth_update(tk, seed=1), now=1.0)
+    assert r.accepted and r.aggregated and r.version == 1
+    assert not _teq(before, svc.server.global_by_size[tk.size])
+    assert svc.records[-1]["n_updates"] == 1
+
+
+def test_buffered_waits_for_m_arrivals():
+    svc = _build(policy="buffered")                # buffer_m = 3
+    tks = svc.dispatch([0, 1, 2], now=0.0)
+    r0 = svc.submit(0, synth_update(tks[0], seed=1), now=1.0)
+    r1 = svc.submit(1, synth_update(tks[1], seed=1), now=2.0)
+    assert not r0.aggregated and not r1.aggregated and svc.version == 0
+    r2 = svc.submit(2, synth_update(tks[2], seed=1), now=3.0)
+    assert r2.aggregated and svc.version == 1
+    assert svc.records[-1]["n_updates"] == 3
+
+
+def test_staleness_counts_aggregations_since_dispatch():
+    svc = _build(policy="async")
+    (slow,) = svc.dispatch(0, now=0.0)             # will go stale
+    for now in (1.0, 2.0):                         # two aggregations pass
+        (tk,) = svc.dispatch(1, now=now)
+        svc.submit(1, synth_update(tk, seed=2), now=now + 0.5)
+    assert svc.version == 2
+    r = svc.submit(0, synth_update(slow, seed=2), now=3.0)
+    assert r.staleness == 2
+    assert svc.metrics.staleness[2] == 1
+    assert svc.records[-1]["staleness"] == [2]
+
+
+def test_wave_feedback_fires_when_wave_resolves():
+    svc = _build(policy="async")
+    tks = svc.dispatch([0, 1], now=0.0)            # one wave, two slots
+    svc.submit(0, synth_update(tks[0], seed=3), now=1.0)
+    assert svc.metrics.counts.get("wave_done", 0) == 0
+    n_hist = len(svc.server.history)
+    svc.submit(1, synth_update(tks[1], seed=3), now=2.0)
+    assert svc.metrics.counts["wave_done"] == 1
+    assert len(svc.server.history) == n_hist + 1   # record_wave ran
+    assert svc._waves == {}
+
+
+# ---------------------------------------------------------------------- #
+# churn
+# ---------------------------------------------------------------------- #
+def test_expiry_rejoin_cycle():
+    svc = _build(policy="async", min_deadline=10.0)
+    (tk,) = svc.dispatch(0, now=0.0)
+    deadline = tk.deadline
+    assert svc.poll(deadline - 1e-6) == 0          # not yet
+    assert svc.poll(deadline + 1e-6) == 1          # churned away
+    assert svc.inflight == 0
+    assert svc.metrics.counts["expired"] == 1
+    # a late submit against the expired ticket bounces
+    late = svc.submit(0, synth_update(tk, seed=1), now=deadline + 1.0)
+    assert not late.accepted and late.reason == "no_ticket"
+    # the client coming back is the rejoin path
+    assert len(svc.dispatch(0, now=deadline + 2.0)) == 1
+    assert svc.metrics.counts["rejoin"] == 1
+    # a wave whose every slot expired still resolves (RL feedback runs)
+    assert svc.metrics.counts["wave_done"] == 1
+
+
+def test_expired_slot_is_freed_for_other_clients():
+    svc = _build(policy="async", max_inflight=1, min_deadline=10.0)
+    (tk,) = svc.dispatch(0, now=0.0)
+    assert svc.dispatch(1, now=1.0) == []          # capacity held by 0
+    got = svc.dispatch(1, now=tk.deadline + 1.0)   # 0 expired -> slot free
+    assert [t.client for t in got] == [1]
+
+
+# ---------------------------------------------------------------------- #
+# codec on the ingest path
+# ---------------------------------------------------------------------- #
+def test_codec_compresses_and_keeps_ef_residuals():
+    codec = make_codec("topk+int8", ratio=0.25, dense_min=64)
+    svc = _build(codec=codec, policy="async")
+    (tk,) = svc.dispatch(0, now=0.0)
+    dense_bytes = 4.0 * sum(
+        np.size(x) for x in jax.tree_util.tree_leaves(
+            {"l": tk.ref_local, "t": tk.ref_lite}))
+    r = svc.submit(0, synth_update(tk, seed=4), now=1.0)
+    assert 0 < r.wire_bytes < 0.5 * dense_bytes
+    assert svc.metrics.up_bytes == r.wire_bytes
+    keys = set(svc.server._ef)
+    assert (0, "local", tk.size) in keys and (0, "lite", "") in keys
+
+
+def test_identity_codec_is_bit_exact_on_ingest():
+    svc = _build(codec=make_codec("identity"), policy="async")
+    (tk,) = svc.dispatch(0, now=0.0)
+    upd = synth_update(tk, seed=5)
+    decoded, _ = svc._ingest_decode(tk, upd)
+    assert _teq(decoded, upd)
+
+
+# ---------------------------------------------------------------------- #
+# observability
+# ---------------------------------------------------------------------- #
+def test_metrics_dump_artifact(tmp_path):
+    svc = _build(policy="async")
+    (tk,) = svc.dispatch(0, now=0.0)
+    svc.submit(0, synth_update(tk, seed=6), now=1.0)
+    out = tmp_path / "m.json"
+    svc.metrics.dump(out)
+    doc = json.loads(out.read_text())
+    snap = doc["snapshot"]
+    assert snap["counts"]["dispatch"] == 1 and snap["counts"]["submit"] == 1
+    assert snap["staleness_hist"] == {"0": 1}
+    assert snap["dispatch"]["n"] == 1 and "p99_ms" in snap["dispatch"]
+    kinds = [e["event"] for e in doc["events"]]
+    assert kinds == ["dispatch", "submit", "aggregate", "wave_done"]
+
+
+def test_reset_window_keeps_cumulative_counters():
+    svc = _build(policy="async")
+    (tk,) = svc.dispatch(0, now=0.0)
+    svc.submit(0, synth_update(tk, seed=7), now=1.0)
+    svc.metrics.reset_window()
+    snap = svc.metrics.snapshot()
+    assert snap["counts"]["submit"] == 1           # cumulative survives
+    assert snap["window_counts"]["submit"] == 0    # window restarted
+    assert snap["dispatch"] is None                # reservoir cleared
+
+
+# ---------------------------------------------------------------------- #
+# durability: the bit-identical kill/restore pin
+# ---------------------------------------------------------------------- #
+def _parity_build(codec_name, seed=0):
+    codec = None if codec_name == "identity" else make_codec(
+        codec_name, ratio=0.25, dense_min=64)
+    av = AvailabilityModel(6, mean_on=30.0, mean_off=8.0, seed=1)
+    return _build(codec=codec, policy="buffered", availability=av,
+                  min_deadline=6.0, seed=seed)
+
+
+@pytest.mark.parametrize("codec_name", ["identity", "topk+int8"])
+def test_checkpoint_restore_bit_identical(tmp_path, codec_name):
+    """N waves -> checkpoint -> kill -> restore -> M waves must equal the
+    uninterrupted N+M run bit-for-bit: globals, lite, both PPO agents
+    (params/opt/buffer/pending), EF residuals, env rng, records, and the
+    deterministic metrics slice."""
+    trace = poisson_trace(80, 6, 1.0, seed=3)
+    cut = 37
+
+    ref = _parity_build(codec_name)
+    LoadGenerator(ref, trace, seed=5).replay()
+
+    first = _parity_build(codec_name)
+    LoadGenerator(first, trace, seed=5).replay(stop=cut)
+    path = first.checkpoint(str(tmp_path / "ck"))
+    del first                                      # the "kill"
+
+    second = _parity_build(codec_name)
+    second.restore(path)
+    LoadGenerator(second, trace, seed=5).replay(start=cut)
+
+    a, b = ref.server, second.server
+    assert _teq(a.lite_params, b.lite_params)
+    assert _teq(a.global_by_size, b.global_by_size)
+    assert jnp.array_equal(a.key, b.key)
+    for oa, ob in ((a.allocator, b.allocator), (a.intensity, b.intensity)):
+        assert _teq(oa.agent.params, ob.agent.params)
+        assert _teq(oa.agent.opt_state, ob.agent.opt_state)
+        assert _teq(oa.agent.buffer, ob.agent.buffer)
+        assert oa.agent.reward_history == ob.agent.reward_history
+    assert sorted(a._ef) == sorted(b._ef)
+    assert all(_teq(a._ef[k], b._ef[k]) for k in a._ef)
+    assert a.env.rng.bit_generator.state == b.env.rng.bit_generator.state
+    assert ref.version == second.version
+    assert ref.records == second.records
+    assert (ref.metrics.deterministic_counts()
+            == second.metrics.deterministic_counts())
+    assert dict(ref.metrics.staleness) == dict(second.metrics.staleness)
+    assert ref.metrics.up_bytes == second.metrics.up_bytes
+    assert ref.metrics.down_bytes == second.metrics.down_bytes
+
+
+def test_restore_refuses_mismatched_config(tmp_path):
+    svc = _build(policy="async")
+    svc.dispatch(0, now=0.0)
+    path = svc.checkpoint(str(tmp_path / "ck"))
+    other = _build(codec=make_codec("topk+int8", ratio=0.25, dense_min=64),
+                   policy="buffered")
+    with pytest.raises(ValueError, match="codec"):
+        other.restore(path)
+
+
+def test_auto_checkpoint_and_latest(tmp_path):
+    svc = _build(policy="async", checkpoint_dir=str(tmp_path),
+                 checkpoint_every=1)
+    for now in (0.0, 5.0):
+        (tk,) = svc.dispatch(0, now=now)
+        svc.submit(0, synth_update(tk, seed=8), now=now + 1.0)
+    assert latest_checkpoint(tmp_path) == str(tmp_path / "ckpt-00000002")
+    assert svc.metrics.counts["checkpoint"] == 2
+    assert latest_checkpoint(tmp_path / "nope") is None
