@@ -1,0 +1,95 @@
+"""Population-scale simulation benchmark (DESIGN.md §15), emitted to
+artifacts/bench/population.json.
+
+Drives the event scheduler over a `PopulationEnv` — struct-of-arrays
+client state, no datasets or per-client objects — at 1k/10k/100k clients
+with sampled participation, a bounded availability-trace cache, and
+latency_only waves (the PPO decision path runs for real; no CNN training,
+which would measure the engine, not the population machinery).
+
+Per row: wall-clock events/sec over a fixed wave budget, peak traced
+python heap (tracemalloc, reset per row), process ru_maxrss, the dense
+ClientStore footprint in bytes/client, and the availability cache's
+hit/evict counters. The regression gate (benchmarks/check_regression.py)
+asserts near-linear scaling: events/sec at the largest population must
+stay within 2x of the smallest population's rate (same process, so
+constant overheads cancel), and the store must stay a few hundred
+bytes/client.
+"""
+from __future__ import annotations
+
+import resource
+import tracemalloc
+
+from benchmarks.common import Timer, emit, save_json
+from repro.core.latency import AvailabilityModel
+from repro.fl import FLSimConfig, HAPFLServer, PopulationEnv
+from repro.sim import BufferedPolicy, EventScheduler
+
+
+def _run_one(n_clients: int, waves: int, k: int = 64, warmup: int = 3,
+             seed: int = 0):
+    tracemalloc.reset_peak()
+    with Timer() as t_build:
+        cfg = FLSimConfig(dataset="mnist", n_clients=n_clients,
+                          k_per_round=k, default_epochs=2, seed=seed)
+        env = PopulationEnv(cfg)
+        srv = HAPFLServer(env, seed=seed, engine="sequential")
+        av = AvailabilityModel(n_clients, seed=seed + 1, max_cached=4096)
+        sched = EventScheduler(srv, BufferedPolicy(buffer_m=16),
+                               availability=av, latency_only=True,
+                               eval_accuracy=False,
+                               participation="sampled")
+    sched.run(waves=warmup)              # absorb PPO jit compilation
+    e0 = sched.n_events
+    with Timer() as t_run:
+        res = sched.run(waves=waves)
+    n_events = sched.n_events - e0
+    _, peak = tracemalloc.get_traced_memory()
+    store = sched.store
+    return {
+        "n_clients": n_clients,
+        "waves": waves,
+        "k_per_round": k,
+        "n_events": n_events,
+        "events_per_sec": round(n_events / t_run.seconds, 1),
+        "n_updates": res.n_updates,
+        "n_dropped": res.n_dropped,
+        "sim_time": round(res.sim_time, 1),
+        "build_s": round(t_build.seconds, 3),
+        "run_s": round(t_run.seconds, 3),
+        "peak_traced_mb": round(peak / 1e6, 2),
+        "ru_maxrss_mb": round(
+            resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024, 1),
+        "store_bytes_per_client": round(store.nbytes() / n_clients, 1),
+        "avail_cached_traces": av.cached_traces,
+        "avail_evicted": av.n_evicted,
+    }
+
+
+def main(populations=(1_000, 10_000, 100_000), waves: int = 60,
+         seed: int = 0, artifact_name: str = "population"):
+    tracemalloc.start()
+    out = {"rows": {}}
+    for n in populations:
+        row = _run_one(n, waves=waves, seed=seed)
+        out["rows"][str(n)] = row
+        emit(f"population_{n}", 1e6 / max(row["events_per_sec"], 1e-9),
+             f"events_per_sec={row['events_per_sec']}"
+             f"_peak_mb={row['peak_traced_mb']}"
+             f"_store_b_per_client={row['store_bytes_per_client']}")
+    tracemalloc.stop()
+    rows = list(out["rows"].values())
+    lo, hi = rows[0], rows[-1]
+    out["linearity"] = {
+        "smallest": lo["n_clients"], "largest": hi["n_clients"],
+        # >= 0.5 means the largest population pays at most 2x per event
+        "events_per_sec_ratio": round(
+            hi["events_per_sec"] / lo["events_per_sec"], 3),
+    }
+    save_json(artifact_name, out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,50 @@ BENCH = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 CURRENT = BENCH / "async_modes.json"
 BASELINE = BENCH / "baselines" / "async_modes.json"
 
+# population-scale gate thresholds (absolute invariants, no baseline):
+# near-linear event throughput — the largest population must process
+# events at >= MIN_EPS_RATIO x the smallest's rate (same process, so
+# machine speed cancels) — and the dense SoA store must stay small
+MIN_EPS_RATIO = 0.5
+MAX_STORE_BYTES_PER_CLIENT = 400.0
+
+
+def check_population(bench_dir: Path) -> list:
+    """Scale invariants over artifacts/bench/population[_quick].json.
+    Quick (bench-smoke) artifact is preferred when both exist; a missing
+    artifact skips the check with a note (the gate's guarantee covers
+    exactly the runs that produced one)."""
+    failures = []
+    path = next((p for p in (bench_dir / "population_quick.json",
+                             bench_dir / "population.json") if p.exists()),
+                None)
+    if path is None:
+        print("  population: no artifact — skipped (run bench_population)")
+        return failures
+    data = json.loads(path.read_text())
+    ratio = data["linearity"]["events_per_sec_ratio"]
+    status = "FAIL" if ratio < MIN_EPS_RATIO else "ok"
+    print(f"  population events/sec ratio "
+          f"({data['linearity']['largest']} vs "
+          f"{data['linearity']['smallest']} clients): {ratio:.3f} "
+          f"(floor {MIN_EPS_RATIO}) {status} [{path.name}]")
+    if ratio < MIN_EPS_RATIO:
+        failures.append(f"population: events/sec at "
+                        f"{data['linearity']['largest']} clients fell to "
+                        f"{ratio:.3f}x of the "
+                        f"{data['linearity']['smallest']}-client rate "
+                        f"(floor {MIN_EPS_RATIO})")
+    for n, row in data["rows"].items():
+        bpc = row["store_bytes_per_client"]
+        if bpc > MAX_STORE_BYTES_PER_CLIENT:
+            failures.append(f"population: store grew to {bpc:.0f} "
+                            f"bytes/client at n={n} (cap "
+                            f"{MAX_STORE_BYTES_PER_CLIENT:.0f})")
+        else:
+            print(f"  population n={n}: {bpc:.0f} bytes/client, "
+                  f"peak {row['peak_traced_mb']} MB traced ok")
+    return failures
+
 
 def sync_relative_ttt(modes: dict) -> dict:
     """policy -> time_to_target / sync's time_to_target (None when either
@@ -102,6 +146,7 @@ def main(argv=None) -> int:
             failures.append(f"{name}: sync-relative time-to-target "
                             f"{b:.3f} -> {c:.3f} (+{rel:.1%} > "
                             f"{args.tolerance:.0%} tolerance)")
+    failures += check_population(args.current.parent)
     if failures:
         print("\nbench regression gate FAILED:", file=sys.stderr)
         for f in failures:

@@ -10,6 +10,7 @@ artifacts/bench/. Budget knobs keep the default full run CPU-tractable;
   fig22/23    bench_latency     straggling latency + overall training time
   (ours)      bench_comm        update codecs x scheduling policies
   (ours)      bench_serve       parameter-service load (updates/sec, p99)
+  (ours)      bench_population  100k-client SoA simulation (events/sec, mem)
   fig24       bench_scalability 20/100-client model-allocation scaling
   fig25       bench_ablation    fixed-size / fixed-intensity ablations
   (ours)      bench_roofline    dry-run roofline table
@@ -28,7 +29,8 @@ def main() -> None:
                     help="tiny budgets (CI smoke)")
     ap.add_argument("--only", default="",
                     help="comma list: rl,accuracy,cross_size,latency,comm,"
-                         "serve,scalability,ablation,roofline,kernels")
+                         "serve,population,scalability,ablation,roofline,"
+                         "kernels")
     ap.add_argument("--datasets", default="mnist",
                     help="comma list for accuracy bench")
     args = ap.parse_args()
@@ -99,6 +101,15 @@ def main() -> None:
             k_per_round=4 if q else 8,
             checkpoint_every=10 if q else 25,
             artifact_name="serve_load_quick" if q else "serve_load"))
+    if want("population"):
+        from benchmarks import bench_population
+        # quick mode writes population_quick.json (1k/10k): the committed
+        # artifacts/bench/population.json is the full 1k/10k/100k record
+        # and must not be clobbered by a smoke run
+        run("population", lambda: bench_population.main(
+            populations=(1_000, 10_000) if q else (1_000, 10_000, 100_000),
+            waves=20 if q else 60,
+            artifact_name="population_quick" if q else "population"))
     if want("scalability"):
         from benchmarks import bench_scalability
         run("scalability", lambda: bench_scalability.main(

@@ -20,3 +20,4 @@ from repro.core.nested import (extract_submodel, embed_submodel,
                                coverage_mask, nested_aggregate)
 from repro.core.latency import (ClientProfile, LatencyModel,
                                 make_heterogeneous_clients, straggling_latency)
+from repro.core.population import ClientStore

@@ -17,13 +17,14 @@ event-driven simulator (DESIGN.md §10).
 """
 from __future__ import annotations
 
-import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 _M64 = (1 << 64) - 1
+_U64 = np.uint64
 
 
 def _splitmix64(x: int) -> int:
@@ -33,17 +34,61 @@ def _splitmix64(x: int) -> int:
     return x ^ (x >> 31)
 
 
+def _splitmix64_np(x: np.ndarray) -> np.ndarray:
+    """splitmix64 avalanche over a uint64 ndarray (wrapping arithmetic)."""
+    x = x + _U64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)
+    return x ^ (x >> _U64(31))
+
+
+def _entropy_u64(e) -> np.ndarray:
+    if isinstance(e, np.ndarray):
+        return e.astype(_U64)
+    return _U64(int(e) & _M64)
+
+
+def counter_normal_array(*entropy) -> np.ndarray:
+    """Vectorized counter-keyed standard-normal draws: each entropy item is
+    an int or an integer ndarray; items broadcast together, and element i
+    of the result equals the scalar draw keyed by element i of every item.
+    Scalar-only inputs yield a shape-(1,) array. One splitmix64 avalanche
+    per entropy item + Box-Muller, all in uint64/float64 numpy — the SoA
+    population path draws a whole cohort's jitter in one call."""
+    shape = np.broadcast_shapes(*(np.shape(e) for e in entropy))
+    flat = shape if shape else (1,)
+    x = np.zeros(flat, _U64)
+    for e in entropy:
+        x = _splitmix64_np(x ^ np.broadcast_to(_entropy_u64(e), flat))
+    u1 = np.maximum((_splitmix64_np(x) >> _U64(11)) / float(1 << 53), 1e-12)
+    u2 = (_splitmix64_np(x + _U64(1)) >> _U64(11)) / float(1 << 53)
+    return np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2)
+
+
 def _counter_normal(*entropy: int) -> float:
     """Standard-normal draw keyed purely by the given integers (splitmix64
     avalanche + Box-Muller) — the same value no matter when or in what
-    order it is queried, at ~1us/draw (a numpy Generator construction per
-    draw costs ~60us, which dominates latency-only RL warmups)."""
-    x = 0
-    for e in entropy:
-        x = _splitmix64(x ^ (int(e) & _M64))
-    u1 = max((_splitmix64(x) >> 11) / float(1 << 53), 1e-12)
-    u2 = (_splitmix64(x + 1) >> 11) / float(1 << 53)
-    return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+    order it is queried. Delegates to the vectorized kernel so the scalar
+    (legacy dict-of-objects) and array (SoA population) paths are bitwise
+    identical by construction."""
+    return float(counter_normal_array(*entropy)[0])
+
+
+def profile_speeds(base_speed, client_id, drift_amp, drift_period,
+                   jitter_sigma, round_idx: int, seed: int = 0) -> np.ndarray:
+    """Vectorized ClientProfile.speed_at over parallel per-client arrays
+    (sinusoidal drift + counter-keyed lognormal jitter). Scalars broadcast;
+    ClientProfile.speed_at routes through here with size-1 inputs, so both
+    paths share every floating-point op."""
+    base_speed = np.asarray(base_speed, np.float64)
+    client_id = np.asarray(client_id, np.int64)
+    drift_amp = np.asarray(drift_amp, np.float64)
+    drift = 1.0 + drift_amp * np.sin(
+        2 * np.pi * round_idx / np.asarray(drift_period, np.float64)
+        + client_id)
+    jitter = np.exp(np.asarray(jitter_sigma, np.float64)
+                    * counter_normal_array(seed, client_id, round_idx))
+    return base_speed * np.maximum(drift, 0.05) * jitter
 
 
 def _counter_rng(*entropy: int) -> np.random.Generator:
@@ -65,12 +110,11 @@ class ClientProfile:
     jitter_sigma: float = 0.05 # per-round lognormal noise
 
     def speed_at(self, round_idx: int, seed: int = 0) -> float:
-        drift = 1.0 + self.drift_amp * np.sin(
-            2 * np.pi * round_idx / self.drift_period + self.client_id)
-        # lognormal(0, sigma) = exp(sigma * N(0, 1)), counter-keyed
-        jitter = math.exp(self.jitter_sigma * _counter_normal(
-            seed, self.client_id, round_idx))
-        return self.base_speed * max(drift, 0.05) * jitter
+        # lognormal(0, sigma) jitter = exp(sigma * N(0, 1)), counter-keyed;
+        # shares the vectorized kernel with the SoA population path
+        return float(profile_speeds(
+            self.base_speed, self.client_id, self.drift_amp,
+            self.drift_period, self.jitter_sigma, round_idx, seed)[0])
 
 
 def make_heterogeneous_clients(n_clients: int, max_speed_ratio: float,
@@ -120,6 +164,28 @@ class LatencyModel:
     def relative_time_ratio(self, size_name: str) -> float:
         """M(.) in Eq. 24: cost of category relative to the LiteModel."""
         return (self.model_costs[size_name] + self.lite_cost) / self.lite_cost
+
+    # ---- vectorized (struct-of-arrays) queries -------------------------- #
+    # element i of each result is bitwise equal to the corresponding scalar
+    # query: the scalar path delegates to the same kernels, so the SoA
+    # population path and the legacy per-profile loop cannot diverge.
+    def assessment_times(self, store, clients, round_idx: int) -> np.ndarray:
+        """T^d for a whole cohort out of a ClientStore, one numpy pass."""
+        c = np.asarray(clients, np.int64)
+        speed = store.speeds_at(c, round_idx, self.seed)
+        return store.dataset_size[c] * self.lite_cost * self.cost_scale / speed
+
+    def local_train_times(self, store, clients, round_idx: int,
+                          size_names: Sequence[str], intensities,
+                          include_lite: bool = True) -> np.ndarray:
+        """T^l for a whole cohort out of a ClientStore, one numpy pass."""
+        c = np.asarray(clients, np.int64)
+        speed = store.speeds_at(c, round_idx, self.seed)
+        lite = self.lite_cost if include_lite else 0.0
+        cost = np.asarray([self.model_costs[s] + lite for s in size_names],
+                          np.float64)
+        per_epoch = store.dataset_size[c] * cost * self.cost_scale / speed
+        return np.maximum(np.asarray(intensities, np.int64), 1) * per_epoch
 
 
 def straggling_latency(times: Sequence[float]) -> float:
@@ -227,22 +293,48 @@ class AvailabilityModel:
     """Per-client on/off availability traces: alternating exponential
     on/off durations, generated lazily from a per-client counter-based
     stream — query order can never change a trace. All clients start
-    online; transition k (0-based) at `_times[c][k]` flips on->off when k
-    is even, off->on when odd.
+    online; transition k (0-based) of a client's trace flips on->off when
+    k is even, off->on when odd.
+
+    Traces live in a bounded LRU cache (`max_cached` clients; 0 disables
+    the bound): a 100k-client population only ever materializes the traces
+    of recently queried clients. Eviction is purity-safe — each client's
+    stream is counter-keyed, so a cold trace regenerates bit-identically
+    from t=0 on the next query (it costs the regeneration walk, nothing
+    else). `n_evicted` counts evictions for the population bench.
     """
 
     def __init__(self, n_clients: int, mean_on: float = 600.0,
-                 mean_off: float = 120.0, seed: int = 0):
+                 mean_off: float = 120.0, seed: int = 0,
+                 max_cached: int = 4096):
         self.n_clients = n_clients
         self.mean_on = float(mean_on)
         self.mean_off = float(mean_off)
         self.seed = seed
-        self._rngs = [_counter_rng(seed, c, 0xA5A11AB) for c in range(n_clients)]
-        self._times: List[List[float]] = [[] for _ in range(n_clients)]
+        self.max_cached = int(max_cached)
+        self.n_evicted = 0
+        # client -> (counter-keyed rng, transition times), LRU-ordered
+        self._traces: "OrderedDict[int, Tuple[np.random.Generator, List[float]]]" = OrderedDict()
+
+    @property
+    def cached_traces(self) -> int:
+        return len(self._traces)
+
+    def trace_transitions(self) -> int:
+        """Total materialized transition count (memory accounting)."""
+        return sum(len(ts) for _, ts in self._traces.values())
 
     def _extend(self, client: int, until: float) -> List[float]:
-        ts = self._times[client]
-        rng = self._rngs[client]
+        ent = self._traces.get(client)
+        if ent is None:
+            ent = (_counter_rng(self.seed, client, 0xA5A11AB), [])
+            self._traces[client] = ent
+            if self.max_cached and len(self._traces) > self.max_cached:
+                self._traces.popitem(last=False)
+                self.n_evicted += 1
+        else:
+            self._traces.move_to_end(client)
+        rng, ts = ent
         while not ts or ts[-1] <= until:
             mean = self.mean_on if len(ts) % 2 == 0 else self.mean_off
             prev = ts[-1] if ts else 0.0

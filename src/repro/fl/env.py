@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.core.latency import LatencyModel, make_heterogeneous_clients
 from repro.core.aggregation import information_entropy
+from repro.core.population import ClientStore
 from repro.data import (BatchLoader, dirichlet_partition, label_histogram,
                         make_image_dataset, prefetch_steps)
 from repro.models.cnn import CNNConfig, apply_cnn, cnn_pool, init_cnn
@@ -36,6 +37,21 @@ class FLSimConfig:
     n_test: int = 600
     seed: int = 0
     md: float = 10.0             # MD (paper Table II)
+
+
+def _select_clients(rng: np.random.Generator, n_clients: int, k_default: int,
+                    k: Optional[int], among) -> List[int]:
+    """Shared participant draw (FLEnvironment + PopulationEnv): sorted
+    sample of k without replacement, optionally restricted to `among`."""
+    kk = k_default if k is None else k
+    if among is None:
+        return sorted(rng.choice(n_clients, size=min(kk, n_clients),
+                                 replace=False).tolist())
+    pool = np.sort(np.asarray(among))
+    kk = min(kk, len(pool))
+    if kk == 0:
+        return []
+    return sorted(rng.choice(pool, size=kk, replace=False).tolist())
 
 
 class FLEnvironment:
@@ -66,6 +82,10 @@ class FLEnvironment:
         self.profiles = make_heterogeneous_clients(
             cfg.n_clients, cfg.max_speed_ratio,
             [len(p) for p in parts], seed=cfg.seed)
+        # struct-of-arrays mirror of the per-client state (DESIGN.md §15);
+        # the server routes latency queries through it vectorized
+        self.store = ClientStore.from_profiles(
+            self.profiles, self.entropies, size_names=cfg.size_names)
         self.rng = np.random.default_rng(cfg.seed + 99)
 
     # ------------------------------------------------------------------ #
@@ -83,16 +103,8 @@ class FLEnvironment:
         """Sample k participants. `among` restricts the pool (the event
         scheduler excludes in-flight / offline clients); None keeps the
         legacy full-pool draw byte-identical."""
-        kk = self.cfg.k_per_round if k is None else k
-        if among is None:
-            return sorted(self.rng.choice(self.cfg.n_clients,
-                                          size=min(kk, self.cfg.n_clients),
-                                          replace=False).tolist())
-        pool = np.asarray(sorted(among))
-        kk = min(kk, len(pool))
-        if kk == 0:
-            return []
-        return sorted(self.rng.choice(pool, size=kk, replace=False).tolist())
+        return _select_clients(self.rng, self.cfg.n_clients,
+                               self.cfg.k_per_round, k, among)
 
     @staticmethod
     def _chunked_accuracy(params, cnn_cfg: CNNConfig, x: np.ndarray,
@@ -128,3 +140,37 @@ class FLEnvironment:
         return self._chunked_accuracy(params, cnn_cfg,
                                       self.data["x_train"][idx],
                                       self.data["y_train"][idx], chunk)
+
+
+class PopulationEnv:
+    """Latency/availability-only environment for population-scale
+    simulation (DESIGN.md §15). Per-client state lives entirely in a
+    struct-of-arrays ClientStore — no datasets, loaders, or ClientProfile
+    objects are ever built, so a 100k-client environment costs megabytes
+    and constructs in milliseconds. Drives `HAPFLServer` through the same
+    wave callbacks as `FLEnvironment`, but only in latency_only mode
+    (plan -> PPO decisions -> feedback; no CNN training or accuracy
+    evaluation): pair with ``EventScheduler(latency_only=True,
+    eval_accuracy=False)`` or a ``ParamService``. Requires the server's
+    ClientStore path (``client_store=True``, the default) — there are no
+    profile objects for the legacy loop to read."""
+
+    def __init__(self, cfg: FLSimConfig, mean_dataset_size: int = 300):
+        self.cfg = cfg
+        pool = cnn_pool(cfg.dataset)
+        self.pool: Dict[str, CNNConfig] = {s: pool[s] for s in cfg.size_names}
+        self.lite_cfg: CNNConfig = pool["lite"]
+        self.latency = LatencyModel(
+            {s: float(c.num_params()) for s, c in self.pool.items()},
+            float(self.lite_cfg.num_params()), seed=cfg.seed)
+        self.store = ClientStore.synthetic(
+            cfg.n_clients, cfg.max_speed_ratio,
+            mean_dataset_size=mean_dataset_size, seed=cfg.seed,
+            size_names=cfg.size_names)
+        self.entropies = self.store.entropy
+        self.rng = np.random.default_rng(cfg.seed + 99)
+
+    def select_clients(self, k: int = None, among: Sequence[int] = None,
+                       ) -> List[int]:
+        return _select_clients(self.rng, self.cfg.n_clients,
+                               self.cfg.k_per_round, k, among)

@@ -79,7 +79,7 @@ class HAPFLServer:
                  weighted_agg: bool = True,
                  lr_ppo1: float = 2e-3, lr_ppo2: float = 3e-4,
                  engine: str = "auto", aggregation: str = "group",
-                 codec=None):
+                 codec=None, client_store: bool = True):
         # paper Table II: lr1=0.02 — unstable for Adam on our tiny actor
         # (PPO1 reward degrades); 2e-3 learns cleanly (DESIGN.md §8).
         if engine not in ("auto", "batched", "sequential"):
@@ -96,10 +96,18 @@ class HAPFLServer:
             codec = make_codec(codec)
         self.codec = codec
         self.codec_seed = seed
+        # struct-of-arrays per-client state (DESIGN.md §15): latency
+        # queries route through it vectorized, and the scheduler/service
+        # mirror their ticket slots into it. client_store=False keeps the
+        # legacy dict-of-objects loop alive for the bit-parity pin in
+        # tests/test_population.py; both paths are byte-identical.
+        self.store = getattr(env, "store", None) if client_store else None
         # error-feedback residuals, keyed (client, kind, size) — "local"
         # trees change shape when PPO1 reassigns sizes, so each (client,
-        # size) pair carries its own residual; "lite" is homogeneous
-        self._ef: Dict = {}
+        # size) pair carries its own residual; "lite" is homogeneous.
+        # With a store this is the store's sparse EF dict (one home for
+        # per-client codec state), aliased so either handle works.
+        self._ef: Dict = {} if self.store is None else self.store.ef
         if engine == "auto":
             # batching wins when per-step compute is small (dispatch-bound
             # small batches) or the backend has parallel hardware; at large
@@ -190,11 +198,18 @@ class HAPFLServer:
         self._round += 1
         if clients is None:
             clients = env.select_clients()
-        clients = list(clients)
+        clients = [int(c) for c in clients]
         m = len(clients)
-        # 1. performance assessment training (one Lite epoch, simulated time)
-        assess = [env.latency.assessment_time(env.profiles[c], r)
-                  for c in clients]
+        # 1. performance assessment training (one Lite epoch, simulated
+        # time) — one vectorized pass over the ClientStore, or the legacy
+        # per-profile loop; element-for-element bitwise identical (the
+        # scalar latency path delegates to the same numpy kernels)
+        if self.store is not None:
+            assess = [float(a) for a in
+                      env.latency.assessment_times(self.store, clients, r)]
+        else:
+            assess = [env.latency.assessment_time(env.profiles[c], r)
+                      for c in clients]
         # 2. PPO1: model allocation
         self.key, k1, k2 = jax.random.split(self.key, 3)
         if self.use_ppo1:
@@ -214,9 +229,15 @@ class HAPFLServer:
             intensities = intensities[:m]
         else:
             intensities = [cfg.default_epochs] * m
-        local_times = [env.latency.local_train_time(env.profiles[c], r, s,
-                                                    tau)
-                       for c, s, tau in zip(clients, sizes, intensities)]
+        if self.store is not None:
+            local_times = [float(t) for t in env.latency.local_train_times(
+                self.store, clients, r, sizes, intensities)]
+            self.store.note_plan(clients, assess, local_times, sizes,
+                                 intensities)
+        else:
+            local_times = [env.latency.local_train_time(env.profiles[c], r,
+                                                        s, tau)
+                           for c, s, tau in zip(clients, sizes, intensities)]
         return WavePlan(round_idx=r, clients=clients, assess=assess,
                         sizes=sizes, intensities=list(intensities),
                         local_times=local_times, latency_only=latency_only)

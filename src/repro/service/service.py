@@ -126,6 +126,12 @@ class ParamService:
         self._waves: Dict[int, Dict] = {}      # open waves (RL feedback)
         self._wave_count = 0
         self._expired_once = set()             # clients seen churning (rejoin)
+        # struct-of-arrays client state (DESIGN.md §15): ticket slots and
+        # churn flags mirror into it so deadline expiry and churn checks
+        # are array scans, not dict walks; the tickets dict stays the
+        # source of truth for reference pytrees (bounded by max_inflight —
+        # only the active cohort materializes trees)
+        self.store = getattr(server, "store", None)
 
     # ------------------------------------------------------------------ #
     # dispatch path
@@ -150,8 +156,7 @@ class ParamService:
                 reason = "offline"
             else:
                 admitted.append(c)
-                if c in self._expired_once:
-                    self._expired_once.discard(c)
+                if self._churn_rejoined(c):
                     self.metrics.bump("rejoin")
                     self.metrics.log(now, "rejoin", client=c)
                 continue
@@ -195,6 +200,10 @@ class ParamService:
                                  size=tk.size, intensity=tk.intensity,
                                  version=self.version,
                                  deadline=round(tk.deadline, 6))
+            if self.store is not None:
+                self.store.open_slots(admitted, w, list(range(m)),
+                                      self.version,
+                                      [tk.deadline for tk in tickets])
         self.metrics.dispatch_s.append(time.perf_counter() - t0)
         return tickets
 
@@ -219,6 +228,8 @@ class ParamService:
                              reason="no_ticket")
             self.metrics.submit_s.append(time.perf_counter() - t0)
             return SubmitReceipt(False, "no_ticket", version=self.version)
+        if self.store is not None:
+            self.store.close_slot(client, "update")
         decoded, wire = self._ingest_decode(tk, params)
         tau = max(self.version - tk.version, 0)
         self.metrics.up_bytes += wire
@@ -299,18 +310,51 @@ class ParamService:
         """Expire tickets whose deadline has passed — how clients that
         disappeared mid-round are detected. Their slots free up for the
         next dispatch; a later submit against an expired ticket is
-        rejected (`no_ticket`)."""
-        expired = sorted((tk for tk in self.tickets.values()
-                          if tk.deadline < now),
-                         key=lambda tk: (tk.deadline, tk.client))
+        rejected (`no_ticket`). With a ClientStore the scan is a
+        vectorized array pass in the same (deadline, client) order as the
+        legacy dict walk."""
+        if self.store is not None:
+            expired = [self.tickets[int(c)]
+                       for c in self.store.expired_clients(now)]
+        else:
+            expired = sorted((tk for tk in self.tickets.values()
+                              if tk.deadline < now),
+                             key=lambda tk: (tk.deadline, tk.client))
         for tk in expired:
             del self.tickets[tk.client]
-            self._expired_once.add(tk.client)
+            if self.store is not None:
+                self.store.close_slot(tk.client, "expired")
+            self._note_expired(tk.client)
             self.metrics.bump("expired")
             self.metrics.log(now, "expire", client=tk.client, wave=tk.wave,
                              deadline=round(tk.deadline, 6))
             self._resolve(tk, now, expired=True)
         return len(expired)
+
+    def _note_expired(self, client: int) -> None:
+        if self.store is not None:
+            self.store.churned[client] = True
+        else:
+            self._expired_once.add(client)
+
+    def _churn_rejoined(self, client: int) -> bool:
+        """Was the client seen churning since its last dispatch? Clears
+        the flag (one rejoin count per churn episode)."""
+        if self.store is not None:
+            if self.store.churned[client]:
+                self.store.churned[client] = False
+                return True
+            return False
+        if client in self._expired_once:
+            self._expired_once.discard(client)
+            return True
+        return False
+
+    def _churned_clients(self) -> List[int]:
+        """Sorted churn set (checkpointing), whichever backend holds it."""
+        if self.store is not None:
+            return [int(c) for c in np.flatnonzero(self.store.churned)]
+        return sorted(int(c) for c in self._expired_once)
 
     def _resolve(self, tk: Ticket, now: float, expired: bool) -> None:
         """Mark a wave slot done (arrived or expired); when the whole wave

@@ -120,7 +120,7 @@ def _pack(svc) -> Tuple[Dict, Dict]:
             "t_dispatch": info["plan"].t_dispatch,
             "outstanding": sorted(info["outstanding"]),
         } for w, info in svc._waves.items()},
-        "expired_once": sorted(int(c) for c in svc._expired_once),
+        "expired_once": svc._churned_clients(),
     }
     return tree, aux
 
@@ -200,10 +200,14 @@ def restore_service(svc, path) -> None:
     _restore_agent_owner(srv.allocator, flat, aux["ppo1"], "ppo1")
     _restore_agent_owner(srv.intensity, flat, aux["ppo2"], "ppo2")
     srv._round = int(aux["round"])
-    srv._ef = {
+    # in place, not reassignment: with a ClientStore, srv._ef aliases
+    # store.ef (one home for sparse per-client codec state) and restore
+    # must not sever that link
+    srv._ef.clear()
+    srv._ef.update({
         (c, kind, size): [np.asarray(flat[f"ef/{c}|{kind}|{size}/{i}"])
                           for i in range(n)]
-        for c, kind, size, n in aux["ef"]}
+        for c, kind, size, n in aux["ef"]})
     srv.env.rng.bit_generator.state = aux["env_rng"]
 
     svc.version = int(aux["version"])
@@ -255,6 +259,18 @@ def restore_service(svc, path) -> None:
                            "acc_local": float(meta["acc_local"]),
                            "acc_lite": float(meta["acc_lite"]),
                            "version": int(meta["version"])})
+
+    # rebuild the ClientStore's live slots from the restored tickets so
+    # vectorized expiry / churn checks continue bit-identically (history
+    # counters are observability-only and restart at zero)
+    store = getattr(svc, "store", None)
+    if store is not None:
+        store.reset_slots()
+        for c, tk in svc.tickets.items():
+            store.open_slots([c], tk.wave, [tk.index], tk.version,
+                             tk.deadline)
+        for c in aux["expired_once"]:
+            store.churned[int(c)] = True
 
 
 def latest_checkpoint(ckpt_dir) -> Optional[str]:

@@ -44,6 +44,19 @@ class EventQueue:
     def push(self, ev: Event) -> None:
         heapq.heappush(self._heap, (ev.sort_key(), ev))
 
+    def push_batch(self, events) -> None:
+        """Push a whole wave's events at once. When the batch rivals the
+        heap in size, extend + heapify is O(n + m) against m pushes'
+        O(m log n); pop order is canonical either way (the permutation
+        test in tests/test_population.py pins batch == sequential)."""
+        items = [(ev.sort_key(), ev) for ev in events]
+        if len(items) > max(len(self._heap), 8):
+            self._heap.extend(items)
+            heapq.heapify(self._heap)
+        else:
+            for item in items:
+                heapq.heappush(self._heap, item)
+
     def pop(self) -> Event:
         return heapq.heappop(self._heap)[1]
 

@@ -59,6 +59,7 @@ class SimResult:
     n_updates: int
     n_dropped: int
     n_assessed: int
+    n_events: int
     mean_straggling: float
     final_acc: float
     time_to_target: Optional[float]
@@ -76,6 +77,7 @@ class SimResult:
             "n_updates": self.n_updates,
             "n_dropped": self.n_dropped,
             "n_assessed": self.n_assessed,
+            "n_events": self.n_events,
             "mean_straggling": round(self.mean_straggling, 4),
             "final_acc": round(self.final_acc, 4),
             "time_to_target": (None if self.time_to_target is None
@@ -96,7 +98,10 @@ class EventScheduler:
     def __init__(self, server, policy, comm: Optional[CommModel] = None,
                  availability: Optional[AvailabilityModel] = None,
                  latency_only: bool = False, eval_accuracy: bool = True,
-                 eval_every: int = 1, deterministic: bool = False):
+                 eval_every: int = 1, deterministic: bool = False,
+                 participation: str = "full"):
+        if participation not in ("full", "sampled"):
+            raise ValueError(f"unknown participation {participation!r}")
         self.server = server
         self.env = server.env
         self.policy = policy
@@ -106,6 +111,17 @@ class EventScheduler:
         self.eval_accuracy = eval_accuracy
         self.eval_every = max(int(eval_every), 1)
         self.deterministic = deterministic
+        # struct-of-arrays client state (DESIGN.md §15): in-flight marks
+        # mirror into it, and candidate filtering reads its mask instead
+        # of probing a dict per client. participation="sampled" replaces
+        # the O(n) full-population candidate scan with O(k) rejection
+        # sampling over the store — the population-scale dispatch path
+        # (different rng consumption than "full", so it is opt-in).
+        self.store = getattr(server, "store", None)
+        self.participation = participation
+        if participation == "sampled" and self.store is None:
+            raise ValueError("participation='sampled' needs a server with "
+                             "a ClientStore (client_store=True)")
 
         self.t = 0.0
         self.version = 0               # server aggregation count
@@ -118,6 +134,7 @@ class EventScheduler:
         self.n_updates = 0
         self.n_dropped = 0
         self.n_assessed = 0
+        self.n_events = 0              # events popped (throughput metric)
         self.up_bytes = 0.0            # counted at ARRIVAL: bytes that made it
         self.down_bytes = 0.0          # counted at dispatch: broadcast bytes
         self._waves: Dict[int, Dict] = {}
@@ -145,11 +162,20 @@ class EventScheduler:
                 return False
         elif self._open_waves:
             return False               # barrier policies: one wave at a time
-        among = None
-        if self.availability is not None or self.inflight:
-            among = [c for c in range(cfg.n_clients)
-                     if c not in self.inflight and self._available(c)]
-        clients = self.env.select_clients(k=k, among=among)
+        if self.participation == "sampled":
+            clients = self.store.sample_available(k, self.env.rng, self.t,
+                                                  self.availability)
+        else:
+            among = None
+            if self.availability is not None or self.inflight:
+                if self.store is not None:
+                    cands = self.store.candidates()
+                    among = (cands if self.availability is None
+                             else [c for c in cands if self._available(c)])
+                else:
+                    among = [c for c in range(cfg.n_clients)
+                             if c not in self.inflight and self._available(c)]
+            clients = self.env.select_clients(k=k, among=among)
         if not clients:
             self._guard_stall()
             return False
@@ -161,50 +187,71 @@ class EventScheduler:
         w = self._wave_count
         self._wave_count += 1
         self._open_waves += 1
-        info = {"plan": plan, "outstanding": set(range(len(clients))),
+        m = len(clients)
+        info = {"plan": plan, "outstanding": set(range(m)),
                 "arrived": [], "done": False}
         self._waves[w] = info
-        finish = []
-        for i, c in enumerate(clients):
-            down = (self.comm.download_time(c, plan.sizes[i])
-                    if self.comm else 0.0)
-            up = self.comm.upload_time(c, plan.sizes[i]) if self.comm else 0.0
-            if self.comm:
-                self.down_bytes += self.comm.payload_bytes(plan.sizes[i],
+        if self.comm:
+            downs = np.array([self.comm.download_time(c, s) for c, s
+                              in zip(clients, plan.sizes)])
+            ups = np.array([self.comm.upload_time(c, s) for c, s
+                            in zip(clients, plan.sizes)])
+            for s in plan.sizes:
+                self.down_bytes += self.comm.payload_bytes(s,
                                                            direction="down")
-            # offsets are computed clock-free (down=up=0 reduces to the
-            # legacy assess+local, bit for bit) and only then anchored at
-            # self.t — `(t + off) - t` would drift a ulp and break parity
-            off = down + plan.assess[i] + plan.local_times[i] + up
-            t_assess = self.t + down + plan.assess[i]
-            t_arrive = self.t + off
-            finish.append(off)
+        else:
+            downs = ups = np.zeros(m)
+        # offsets are computed clock-free (down=up=0 reduces to the
+        # legacy assess+local, bit for bit) and only then anchored at
+        # self.t — `(t + off) - t` would drift a ulp and break parity.
+        # One vectorized pass replaces the per-client arithmetic; the
+        # operation order matches the old scalar loop exactly.
+        offs = downs + np.asarray(plan.assess) + np.asarray(plan.local_times) \
+            + ups
+        t_assess = self.t + downs + np.asarray(plan.assess)
+        t_arrive = self.t + offs
+        evs = []
+        for i, c in enumerate(clients):
             self.inflight[c] = (w, i)
-            self.queue.push(Event(t_assess, ASSESS_DONE, c, w))
-            drop_t = (self.availability.next_offline(c, self.t, t_arrive)
+            evs.append(Event(float(t_assess[i]), ASSESS_DONE, c, w))
+            drop_t = (self.availability.next_offline(c, self.t,
+                                                     float(t_arrive[i]))
                       if self.availability else None)
             if drop_t is not None:
-                self.queue.push(Event(drop_t, DROPOUT, c, w))
+                evs.append(Event(drop_t, DROPOUT, c, w))
             else:
-                self.queue.push(Event(t_arrive, ARRIVAL, c, w))
-        info["finish"] = finish
+                evs.append(Event(float(t_arrive[i]), ARRIVAL, c, w))
+        if self.store is not None:
+            self.store.open_slots(clients, w, list(range(m)), plan.version)
+        self.queue.push_batch(evs)
+        info["finish"] = [float(o) for o in offs]
         if pol.name == "deadline":
             d = (pol.fixed if pol.fixed is not None
-                 else float(np.quantile(finish, pol.quantile)))
+                 else float(np.quantile(info["finish"], pol.quantile)))
             info["deadline"] = self.t + d
             self.queue.push(Event(self.t + d, DEADLINE, -1, w))
         return True
 
     def _guard_stall(self) -> None:
         """Nobody dispatchable right now: if the queue would otherwise run
-        dry, wake up when the first offline client rejoins."""
+        dry, wake up when the first offline client rejoins. Under sampled
+        participation only a bounded probe of clients is scanned (an O(n)
+        trace walk at 100k clients would dwarf the whole run) — the wakeup
+        may be later than the true earliest rejoin, which only delays the
+        next dispatch attempt, never drops it."""
         if (self.availability is None or self.inflight or self.queue
                 or self._wave_count >= self._max_waves):
             return
-        times = [self.availability.next_online(c, self.t)
-                 for c in range(self.env.cfg.n_clients)]
-        c = int(np.argmin(times))
-        self.queue.push(Event(float(times[c]), REJOIN, c, -1))
+        if self.participation == "sampled":
+            n = self.env.cfg.n_clients
+            probe = self.env.rng.choice(n, size=min(1024, n), replace=False)
+        else:
+            probe = range(self.env.cfg.n_clients)
+        times = [self.availability.next_online(int(c), self.t)
+                 for c in probe]
+        j = int(np.argmin(times))
+        self.queue.push(Event(float(times[j]), REJOIN, int(list(probe)[j]),
+                              -1))
 
     # ------------------------------------------------------------------ #
     def _aggregate(self, entries: List[Tuple[int, int]], stale: bool = True,
@@ -293,6 +340,8 @@ class EventScheduler:
         if self.inflight.get(ev.client, (None, None))[0] != ev.wave:
             return                     # stale event: client dropped/requeued
         w, i = self.inflight.pop(ev.client)
+        if self.store is not None:
+            self.store.close_slot(ev.client, "update")
         info = self._waves[w]
         info["outstanding"].discard(i)
         info["arrived"].append((i, ev.time))
@@ -320,6 +369,8 @@ class EventScheduler:
             c = plan.clients[i]
             if self.inflight.get(c) == (ev.wave, i):
                 del self.inflight[c]
+                if self.store is not None:
+                    self.store.close_slot(c, "expired")
             self.n_dropped += 1
         info["outstanding"].clear()
         self._finish_wave(ev.wave, aggregate=True)
@@ -328,6 +379,8 @@ class EventScheduler:
         if self.inflight.get(ev.client, (None, None))[0] != ev.wave:
             return
         w, i = self.inflight.pop(ev.client)
+        if self.store is not None:
+            self.store.close_slot(ev.client, "dropped")
         info = self._waves[w]
         info["outstanding"].discard(i)
         self.n_dropped += 1
@@ -382,6 +435,7 @@ class EventScheduler:
                 self.t = max_time
                 break
             self.queue.pop()
+            self.n_events += 1
             self.t = ev.time
             handlers[ev.kind](ev)
         if self.buffer and self.time_to_target is None:
@@ -399,7 +453,7 @@ class EventScheduler:
             policy=self.policy.name, sim_time=self.t,
             n_waves=self._wave_count, n_aggregations=len(self.records),
             n_updates=self.n_updates, n_dropped=self.n_dropped,
-            n_assessed=self.n_assessed,
+            n_assessed=self.n_assessed, n_events=self.n_events,
             mean_straggling=float(np.mean(stragg)) if stragg else 0.0,
             final_acc=float(final), time_to_target=self.time_to_target,
             up_bytes=self.up_bytes, down_bytes=self.down_bytes,

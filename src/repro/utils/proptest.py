@@ -1,0 +1,101 @@
+"""Minimal deterministic stand-in for the `hypothesis` API subset our
+property tests use (given / settings / floats / integers / lists /
+sampled_from / tuples).
+
+CI installs real hypothesis and tests/test_properties.py prefers it; this
+shim exists so the properties still *run* (instead of skipping) in
+environments without it — e.g. the pinned reproduction container, where
+adding packages is not allowed. Examples are drawn from a generator
+seeded by the test name, so runs are reproducible; there is no shrinking,
+and a falsifying example is reported verbatim in the raised error.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, List, Sequence
+
+import numpy as np
+
+
+class SearchStrategy:
+    """A strategy is just a draw function rng -> value."""
+
+    def __init__(self, draw: Callable[[np.random.Generator], Any],
+                 edges: Sequence[Any] = ()):
+        self._draw = draw
+        #: deterministic boundary examples tried before random ones
+        self.edges = list(edges)
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           ) -> SearchStrategy:
+    lo, hi = float(min_value), float(max_value)
+    return SearchStrategy(lambda rng: float(rng.uniform(lo, hi)),
+                          edges=[lo, hi])
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    lo, hi = int(min_value), int(max_value)
+    return SearchStrategy(lambda rng: int(rng.integers(lo, hi + 1)),
+                          edges=[lo, hi])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    edge = [elements.edges[0]] * max(min_size, 1) if elements.edges else []
+    return SearchStrategy(draw, edges=[edge] if min_size <= len(edge) else [])
+
+
+def sampled_from(options: Sequence[Any]) -> SearchStrategy:
+    opts = list(options)
+    return SearchStrategy(lambda rng: opts[int(rng.integers(len(opts)))],
+                          edges=opts[:1])
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def settings(max_examples: int = 30, deadline=None, **_ignored):
+    def deco(fn):
+        fn._proptest_max_examples = int(max_examples)
+        return fn
+    return deco
+
+
+def given(*strategies: SearchStrategy):
+    """Run the test once per drawn example (plus one all-edges example).
+    The rng is seeded from the test name, so a failure reproduces."""
+    def deco(fn):
+        n_examples = getattr(fn, "_proptest_max_examples", 30)
+
+        # no functools.wraps: pytest must see a zero-arg signature, or it
+        # would treat the property's drawn arguments as missing fixtures
+        def wrapper():
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__name__.encode()) & 0xFFFFFFFF)
+            cases: List[tuple] = []
+            if all(s.edges for s in strategies):
+                cases.append(tuple(s.edges[0] for s in strategies))
+            cases += [tuple(s.example(rng) for s in strategies)
+                      for _ in range(n_examples)]
+            for case in cases:
+                try:
+                    fn(*case)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} falsified by example {case!r}: "
+                        f"{type(e).__name__}: {e}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis_shim = True
+        return wrapper
+    return deco

@@ -1,0 +1,285 @@
+"""Population-scale client state (DESIGN.md §15): SoA-vs-legacy bit
+parity, vectorized latency/event machinery, sampled participation,
+memory shape, and 10k-client scale regressions."""
+import numpy as np
+import pytest
+
+from repro.core.latency import AvailabilityModel
+from repro.core.population import ClientStore
+from repro.fl import (FLEnvironment, FLSimConfig, HAPFLServer,
+                      PopulationEnv)
+from repro.service import ParamService, synth_update
+from repro.sim import (BufferedPolicy, Event, EventQueue, EventScheduler,
+                       SyncPolicy)
+from repro.sim.events import ARRIVAL, ASSESS_DONE, DEADLINE, DROPOUT
+
+CFG = FLSimConfig(dataset="mnist", n_train=300, n_test=80, n_clients=10,
+                  k_per_round=4, batches_per_epoch=1, default_epochs=2,
+                  batch_size=16, seed=3)
+
+
+def _teq(a, b):
+    import jax
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        for x, y in zip(la, lb))
+
+
+# --------------------------------------------------------------------- #
+# tentpole pin: SoA store path == legacy dict-of-objects path, bitwise
+# --------------------------------------------------------------------- #
+def test_store_path_matches_legacy_bitwise():
+    srv_soa = HAPFLServer(FLEnvironment(CFG), seed=3)          # store path
+    srv_leg = HAPFLServer(FLEnvironment(CFG), seed=3,
+                          client_store=False)                  # legacy loop
+    assert srv_soa.store is not None and srv_leg.store is None
+    recs_a = srv_soa.run(3)
+    recs_b = srv_leg.run(3)
+    for a, b in zip(recs_a, recs_b):
+        assert a.clients == b.clients
+        assert a.sizes == b.sizes
+        assert a.intensities == b.intensities
+        assert a.assess_times == b.assess_times
+        assert a.local_times == b.local_times
+        assert a.straggling == b.straggling
+        assert a.reward_ppo1 == b.reward_ppo1
+        assert a.reward_ppo2 == b.reward_ppo2
+        assert a.acc_lite == b.acc_lite
+        assert a.acc_by_size == b.acc_by_size
+        assert a.client_acc == b.client_acc
+    assert _teq(srv_soa.lite_params, srv_leg.lite_params)
+    for s in srv_soa.global_by_size:
+        assert _teq(srv_soa.global_by_size[s], srv_leg.global_by_size[s])
+    assert _teq(srv_soa.allocator.agent.params,
+                srv_leg.allocator.agent.params)
+    assert _teq(srv_soa.intensity.agent.params,
+                srv_leg.intensity.agent.params)
+    # the store recorded what was planned
+    st = srv_soa.store
+    planned = sorted({c for r in recs_a for c in r.clients})
+    assert sorted(np.flatnonzero(st.n_planned > 0).tolist()) == planned
+
+
+def test_store_ef_is_shared_with_server():
+    srv = HAPFLServer(FLEnvironment(CFG), seed=3, codec="int8")
+    assert srv._ef is srv.store.ef
+    srv.run(1)
+    assert len(srv.store.ef) > 0        # lossy codec left residuals behind
+    assert srv.store.nbytes() > 0
+
+
+# --------------------------------------------------------------------- #
+# vectorized latency == scalar latency, bitwise
+# --------------------------------------------------------------------- #
+def test_vectorized_latency_matches_scalar_bitwise():
+    env = FLEnvironment(CFG)
+    store, lat = env.store, env.latency
+    clients = list(range(CFG.n_clients))
+    sizes = ["small" if c % 2 else "large" for c in clients]
+    taus = [1 + (c % 5) for c in clients]
+    for r in (0, 7, 31):
+        vec_a = lat.assessment_times(store, clients, r)
+        vec_l = lat.local_train_times(store, clients, r, sizes, taus)
+        for i, c in enumerate(clients):
+            p = env.profiles[c]
+            assert float(vec_a[i]) == lat.assessment_time(p, r)
+            assert float(vec_l[i]) == lat.local_train_time(
+                p, r, sizes[i], taus[i])
+
+
+# --------------------------------------------------------------------- #
+# event queue at scale: canonical order, batch == sequential
+# --------------------------------------------------------------------- #
+def _random_events(n, seed):
+    rng = np.random.default_rng(seed)
+    kinds = [ASSESS_DONE, ARRIVAL, DEADLINE, DROPOUT]
+    # coarse times force plenty of exact ties across kinds/clients
+    return [Event(float(rng.integers(0, n // 10)),
+                  kinds[int(rng.integers(4))],
+                  int(rng.integers(n)), int(rng.integers(8)))
+            for _ in range(n)]
+
+
+def test_event_queue_10k_pop_order_insertion_invariant():
+    evs = _random_events(10_000, seed=0)
+    q1, q2, q3 = EventQueue(), EventQueue(), EventQueue()
+    for ev in evs:
+        q1.push(ev)
+    q2.push_batch(evs)                       # heapify path (big batch)
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(len(evs))
+    for j in perm:                           # same set, shuffled pushes
+        q3.push(evs[int(j)])
+    out1 = [q1.pop() for _ in range(len(evs))]
+    assert out1 == [q2.pop() for _ in range(len(evs))]
+    assert out1 == [q3.pop() for _ in range(len(evs))]
+    keys = [ev.sort_key() for ev in out1]
+    assert keys == sorted(keys)
+
+
+def test_push_batch_small_batches_match_sequential():
+    evs = _random_events(64, seed=2)
+    q1, q2 = EventQueue(), EventQueue()
+    for ev in evs[:5]:
+        q1.push(ev)
+        q2.push(ev)
+    q2.push_batch(evs[5:12])                 # small batch: heappush path
+    q2.push_batch(evs[12:])                  # large batch: heapify path
+    for ev in evs[5:]:
+        q1.push(ev)
+    while q1:
+        assert q1.pop() == q2.pop()
+    assert not q2
+
+
+# --------------------------------------------------------------------- #
+# availability at scale: purity + bounded trace cache
+# --------------------------------------------------------------------- #
+def test_availability_10k_query_order_pure_and_bounded():
+    n = 10_000
+    rng = np.random.default_rng(5)
+    clients = rng.integers(0, n, size=3000)
+    times = rng.uniform(0.0, 500.0, size=3000)
+    bounded = AvailabilityModel(n, seed=9, max_cached=64)
+    reference = AvailabilityModel(n, seed=9)         # default large cache
+    got = [bounded.available(int(c), float(t))
+           for c, t in zip(clients, times)]
+    # reference queried in REVERSE order: purity + eviction regeneration
+    want = [reference.available(int(c), float(t))
+            for c, t in zip(clients[::-1], times[::-1])][::-1]
+    assert got == want
+    assert bounded.cached_traces <= 64
+    assert bounded.n_evicted > 0
+    # re-querying an evicted client regenerates its trace bit-identically
+    c0, t0 = int(clients[0]), float(times[0])
+    assert bounded.available(c0, t0) == got[0]
+    assert bounded.next_online(c0, t0) == reference.next_online(c0, t0)
+
+
+# --------------------------------------------------------------------- #
+# sampled participation
+# --------------------------------------------------------------------- #
+class _EvenOnly:
+    """Stub availability: odd clients are always offline."""
+
+    def available(self, c, t):
+        return c % 2 == 0
+
+
+def test_sample_available_excludes_inflight_and_offline():
+    store = ClientStore.synthetic(1000, 10.0, seed=1)
+    store.open_slots([0, 2, 4, 6], wave=0, indices=[0, 1, 2, 3], version=0)
+    rng = np.random.default_rng(0)
+    picked = store.sample_available(32, rng, 0.0, _EvenOnly())
+    assert len(picked) == 32
+    assert picked == sorted(picked) and len(set(picked)) == 32
+    assert all(c % 2 == 0 for c in picked)
+    assert not any(c in (0, 2, 4, 6) for c in picked)
+
+
+def test_sample_available_exact_fallback_when_pool_is_tight():
+    store = ClientStore.synthetic(10, 10.0, seed=1)
+    store.open_slots([1, 3, 5, 7, 9], 0, list(range(5)), 0)
+    rng = np.random.default_rng(0)
+    # k exceeds the dispatchable pool: rejection sampling alone can't fill
+    # it, the exact fallback must return everyone who is eligible
+    assert store.sample_available(8, rng, 0.0) == [0, 2, 4, 6, 8]
+
+
+def test_slot_bookkeeping_counts_outcomes():
+    store = ClientStore.synthetic(6, 4.0, seed=0)
+    store.open_slots([1, 4], 3, [0, 1], 7, deadline=10.0)
+    assert store.candidates().tolist() == [0, 2, 3, 5]
+    assert store.expired_clients(9.0).size == 0
+    assert store.expired_clients(11.0).tolist() == [1, 4]
+    store.close_slot(1, "update")
+    store.close_slot(4, "expired")
+    assert not store.inflight.any()
+    assert store.n_updates[1] == 1 and store.n_expired[4] == 1
+    assert store.ticket_deadline[1] == np.inf
+
+
+def test_expired_order_matches_legacy_deadline_then_client():
+    store = ClientStore.synthetic(8, 4.0, seed=0)
+    store.open_slots([5, 2, 7, 1], 0, list(range(4)), 0,
+                     deadline=np.array([3.0, 9.0, 3.0, 5.0]))
+    # legacy poll() sorts by (deadline, client): 3.0->{5,7}, 5.0->1
+    assert store.expired_clients(6.0).tolist() == [5, 7, 1]
+
+
+# --------------------------------------------------------------------- #
+# population environment: 10k-client scheduler smoke + determinism
+# --------------------------------------------------------------------- #
+def _pop_sched(n=10_000, seed=0, participation="sampled"):
+    cfg = FLSimConfig(dataset="mnist", n_clients=n, k_per_round=16,
+                      default_epochs=2, seed=seed)
+    env = PopulationEnv(cfg)
+    srv = HAPFLServer(env, seed=seed, engine="sequential")
+    sched = EventScheduler(
+        srv, BufferedPolicy(buffer_m=8),
+        availability=AvailabilityModel(n, seed=seed + 1, max_cached=512),
+        latency_only=True, eval_accuracy=False,
+        participation=participation)
+    return sched
+
+
+def test_population_env_10k_smoke_and_determinism():
+    res1 = _pop_sched(seed=4).run(waves=20)
+    res2 = _pop_sched(seed=4).run(waves=20)
+    assert res1.n_updates > 0 and res1.n_events > 0
+    assert res1.summary() == res2.summary()
+    assert [(r.time, r.version, r.n_updates, r.staleness)
+            for r in res1.records] == \
+           [(r.time, r.version, r.n_updates, r.staleness)
+            for r in res2.records]
+
+
+def test_population_sampled_never_double_dispatches():
+    sched = _pop_sched(n=2000, seed=6)
+    sched.run(waves=12)
+    st = sched.store
+    # in-flight mask mirrors the scheduler dict exactly
+    assert set(np.flatnonzero(st.inflight).tolist()) == \
+        set(sched.inflight.keys())
+    # every update/expiry was accounted once
+    assert int(st.n_updates.sum()) == sched.n_updates
+
+
+# --------------------------------------------------------------------- #
+# memory shape: inactive clients materialize no parameter pytrees
+# --------------------------------------------------------------------- #
+def test_population_run_materializes_no_client_params():
+    sched = _pop_sched(n=5000, seed=1)
+    sched.run(waves=10)
+    for info in sched._waves.values():
+        assert info["plan"].client_params == []
+    # dense store stays a few hundred bytes per client, EF empty
+    st = sched.store
+    assert st.ef == {}
+    assert st.nbytes() < 250 * st.n_clients
+
+
+def test_service_tickets_pin_globals_by_reference():
+    cfg = FLSimConfig(dataset="mnist", n_train=200, n_test=60, n_clients=6,
+                      k_per_round=3, batches_per_epoch=1, default_epochs=2,
+                      batch_size=16)
+    srv = HAPFLServer(FLEnvironment(cfg), seed=0)
+    svc = ParamService(srv, policy="async", min_deadline=50.0)
+    tks = svc.dispatch([0, 1], now=0.0)
+    for tk in tks:
+        assert tk.ref_lite is srv.lite_params           # reference, no copy
+        assert tk.ref_local is srv.global_by_size[tk.size]
+    # store slots mirror the ticket dict, deadlines included
+    st = svc.store
+    assert set(np.flatnonzero(st.inflight).tolist()) == set(svc.tickets)
+    for tk in tks:
+        assert st.ticket_deadline[tk.client] == tk.deadline
+    svc.submit(0, synth_update(tks[0], seed=1), now=1.0)
+    assert set(np.flatnonzero(st.inflight).tolist()) == set(svc.tickets)
+    assert st.n_updates[0] == 1
+    # expiry path closes the slot and marks churn
+    svc.poll(now=1e9)
+    assert not st.inflight.any()
+    assert bool(st.churned[1])
+    assert svc._churned_clients() == [1]

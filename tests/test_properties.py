@@ -1,12 +1,23 @@
-"""Property-based tests (hypothesis) for the system's invariants."""
+"""Property-based tests for the system's invariants.
+
+Runs under real hypothesis when installed (CI does); otherwise falls
+back to the deterministic shim in repro.utils.proptest so the properties
+still execute — instead of skipping — in the pinned container.
+"""
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised in the pinned container
+    from repro.utils.proptest import given, settings
+    from repro.utils import proptest as st
 
+from repro.comm.codec import make_codec
+from repro.comm.quantize import dequantize, quantize
 from repro.core.aggregation import (aggregation_weights, fedavg_aggregate,
-                                    information_entropy, weighted_aggregate)
+                                    information_entropy, staleness_weights,
+                                    weighted_aggregate)
 from repro.core.latency import ClientProfile, LatencyModel
 from repro.core.ppo import discounted_returns
 from repro.launch.hlo_analysis import shape_bytes
@@ -90,3 +101,98 @@ def test_fedavg_weighted_mean_exact():
     t2 = {"a": 3 * np.ones(3, np.float32)}
     agg = fedavg_aggregate([t1, t2], sizes=[1, 3])
     np.testing.assert_allclose(agg["a"], 2.5 * np.ones(3), rtol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# codec round-trip properties
+# --------------------------------------------------------------------- #
+def _random_tree(rng, scale):
+    return {"w": (scale * rng.standard_normal((3, 5))).astype(np.float32),
+            "b": (scale * rng.standard_normal(7)).astype(np.float32)}
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1e-3, 10.0))
+@settings(max_examples=30, deadline=None)
+def test_identity_codec_roundtrip_bit_exact(seed, scale):
+    rng = np.random.default_rng(seed)
+    params = _random_tree(rng, scale)
+    ref = _random_tree(rng, scale)
+    codec = make_codec("identity")
+    enc, state = codec.encode(params, ref, None, seed=0, client=1,
+                              round_idx=2, tag="local")
+    out = codec.decode(enc, ref)
+    assert state is None
+    for k in params:
+        assert np.asarray(out[k]).tobytes() == params[k].tobytes()
+    assert enc.wire_bytes == sum(v.size for v in params.values()) * 4.0
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1e-3, 10.0),
+       st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_int8_quantize_error_within_one_level(seed, scale, round_idx):
+    """Stochastic rounding to 8-bit levels is off by at most one level
+    (= qt.scale) elementwise, for any tensor and entropy."""
+    rng = np.random.default_rng(seed)
+    x = (scale * rng.standard_normal(257)).astype(np.float32)
+    qt = quantize(x, 8, 0, seed, round_idx)
+    err = np.abs(dequantize(qt).astype(np.float64) - x.astype(np.float64))
+    assert err.max() <= qt.scale * (1.0 + 1e-5) + 1e-7
+    # constant tensors round-trip exactly (scale falls back to 1, q = 0)
+    c = np.full(5, float(x[0]), np.float32)
+    np.testing.assert_array_equal(dequantize(quantize(c, 8, seed)), c)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1e-2, 2.0),
+       st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_int8_ef_residual_bounded(seed, amp, rounds):
+    """Error feedback keeps the carried residual within one quantization
+    level of the EF-corrected delta each round, and the cumulative decoded
+    update deviates from the true cumulative delta by exactly the final
+    residual (telescoping)."""
+    rng = np.random.default_rng(seed)
+    codec = make_codec("int8")
+    ref = {"a": np.zeros(64, np.float32)}
+    state = None
+    true_cum = np.zeros(64, np.float64)
+    dec_cum = np.zeros(64, np.float64)
+    for t in range(rounds):
+        delta = (amp * rng.standard_normal(64)).astype(np.float32)
+        prev = state[0] if state is not None else np.zeros(64, np.float32)
+        corrected = delta.astype(np.float64) + prev.astype(np.float64)
+        params = {"a": ref["a"] + delta}
+        enc, state = codec.encode(params, ref, state, seed=0, client=3,
+                                  round_idx=t, tag="local")
+        dec = codec.decode(enc, ref)
+        dec_cum += np.asarray(dec["a"], np.float64)
+        true_cum += delta.astype(np.float64)
+        level = max(np.ptp(corrected) / 255.0, 0.0)
+        assert np.abs(state[0]).max() <= level * (1.0 + 1e-4) + 1e-6
+    gap = np.abs(dec_cum - true_cum)
+    np.testing.assert_allclose(gap, np.abs(state[0].astype(np.float64)),
+                               atol=rounds * 1e-5)
+    assert gap.max() <= level * (1.0 + 1e-4) + rounds * 1e-5
+
+
+@given(st.lists(floats, min_size=2, max_size=12),
+       st.lists(st.floats(0.0, 1.0), min_size=2, max_size=12),
+       st.integers(0, 20), st.floats(0.1, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_staleness_weights_normalized_monotone(ent, acc, tau, exponent):
+    n = min(len(ent), len(acc))
+    ent, acc = ent[:n], acc[:n]
+    # staleness=None is exactly Eq. 38 (no discount, no renormalization)
+    np.testing.assert_array_equal(staleness_weights(ent, acc, None),
+                                  aggregation_weights(ent, acc))
+    # any staleness vector still lands on the simplex
+    stale = [(tau + i) % 23 for i in range(n)]
+    w = staleness_weights(ent, acc, stale, exponent)
+    assert abs(w.sum() - 1.0) < 1e-9
+    assert (w >= 0).all()
+    # equal-quality clients: the staler one never outweighs the fresher
+    ent2, acc2 = [ent[0]] * 2, [acc[0]] * 2
+    w2 = staleness_weights(ent2, acc2, [tau, tau + 1], exponent)
+    assert w2[0] > w2[1]
+    w3 = staleness_weights(ent2, acc2, [tau, tau], exponent)
+    np.testing.assert_allclose(w3, [0.5, 0.5], atol=1e-12)
