@@ -17,6 +17,7 @@ import numpy as np
 from benchmarks.common import (Timer, emit, measure_engine_throughput,
                                save_json)
 from repro.fl import BaselineRunner, FLEnvironment, FLSimConfig, HAPFLServer
+from repro.obs import trace as obs_trace
 from repro.sim import EventScheduler, make_policy
 
 
@@ -52,6 +53,12 @@ def run_policy_comparison(max_updates: int = 150, target_acc: float = 0.4,
     identical fixed workload and only the aggregation timing differs).
     Budget is total client-updates consumed, the apples-to-apples unit —
     a sync round spends k at once, async spends them one at a time."""
+    # trace the runs so SimResult.timing (per-wave assess/local/comm/barrier
+    # virtual-time breakdown, DESIGN.md §16) lands in the rows; reuse an
+    # already-active tracer (e.g. run.py --trace) instead of replacing it
+    own_tracer = not obs_trace.current().enabled
+    if own_tracer:
+        obs_trace.enable()
     out = {}
     for spec in policies:
         spec = dict(spec)
@@ -68,7 +75,10 @@ def run_policy_comparison(max_updates: int = 150, target_acc: float = 0.4,
         row = res.summary()
         row["target_acc"] = target_acc
         row["wall_seconds"] = round(t.seconds, 1)
+        row["timing"] = res.timing
         out[pol.name] = row
+    if own_tracer:
+        obs_trace.disable()
     base = out.get("sync", {}).get("time_to_target")
     for name, row in out.items():
         ttt = row.get("time_to_target")

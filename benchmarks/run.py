@@ -15,6 +15,9 @@ artifacts/bench/. Budget knobs keep the default full run CPU-tractable;
   fig25       bench_ablation    fixed-size / fixed-intensity ablations
   (ours)      bench_roofline    dry-run roofline table
   (ours)      bench_kernels     kernel traffic models / CPU timings
+  (ours)      bench_obs         traced sim/service run -> Perfetto trace
+                                (Chrome trace-event schema smoke) + tracer
+                                overhead
 """
 from __future__ import annotations
 
@@ -30,12 +33,21 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: rl,accuracy,cross_size,latency,comm,"
                          "serve,population,scalability,ablation,roofline,"
-                         "kernels")
+                         "kernels,obs")
     ap.add_argument("--datasets", default="mnist",
                     help="comma list for accuracy bench")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a dual-clock span trace across the "
+                         "selected benches and write Chrome trace-event "
+                         "JSON (open at https://ui.perfetto.dev)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     q = args.quick
+
+    tracer = None
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        tracer = obs_trace.enable()
 
     def want(name):
         return only is None or name in only
@@ -126,6 +138,14 @@ def main() -> None:
     if want("kernels"):
         from benchmarks import bench_kernels
         run("kernels", bench_kernels.main)
+    if want("obs"):
+        from benchmarks import bench_obs
+        run("obs", lambda: bench_obs.main(quick=q))
+
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"# trace ({len(tracer.events)} events) -> {args.trace}",
+              file=sys.stderr)
 
     if failures:
         print(f"# FAILED benches: {failures}", file=sys.stderr)

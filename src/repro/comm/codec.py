@@ -39,6 +39,7 @@ import numpy as np
 from repro.comm.quantize import (BYTES_AFFINE_MAP, QuantTensor, dequantize,
                                  quantize)
 from repro.comm.sparsify import densify, topk_count, topk_select
+from repro.obs.trace import current as _tracer
 
 # stable integer tags mixed into the stochastic-rounding entropy so the
 # "local" and "lite" halves of one client's update draw distinct streams
@@ -129,13 +130,15 @@ class IdentityCodec(Codec):
     is_identity = True
 
     def encode(self, params, reference, state=None, **_):
-        leaves, treedef = _flatten(params)
-        n = sum(np.size(x) for x in leaves)
-        return EncodedUpdate("identity", treedef, leaves,
-                             n * BYTES_F32), None
+        with _tracer().span("codec.encode", codec=self.name):
+            leaves, treedef = _flatten(params)
+            n = sum(np.size(x) for x in leaves)
+            return EncodedUpdate("identity", treedef, leaves,
+                                 n * BYTES_F32), None
 
     def decode(self, encoded, reference):
-        return _unflatten(encoded.treedef, encoded.payloads)
+        with _tracer().span("codec.decode", codec=self.name):
+            return _unflatten(encoded.treedef, encoded.payloads)
 
     def wire_bytes(self, n_params, n_tensors=0):
         return float(n_params) * BYTES_F32
@@ -152,6 +155,13 @@ class _DeltaCodec(Codec):
 
     def encode(self, params, reference, state=None, *, seed=0, client=0,
                round_idx=0, tag="local"):
+        with _tracer().span("codec.encode", codec=self.name,
+                            client=int(client), tag=tag):
+            return self._encode(params, reference, state, seed, client,
+                                round_idx, tag)
+
+    def _encode(self, params, reference, state, seed, client, round_idx,
+                tag):
         p_leaves, treedef = _flatten(params)
         r_leaves, r_def = _flatten(reference)
         if treedef != r_def:
@@ -173,13 +183,14 @@ class _DeltaCodec(Codec):
         return EncodedUpdate(self.name, treedef, payloads, total), new_state
 
     def decode(self, encoded, reference):
-        r_leaves, r_def = _flatten(reference)
-        if encoded.treedef != r_def:
-            raise ValueError("encoded/reference structure mismatch")
-        leaves = [(np.asarray(r, np.float32) + self._decode_leaf(p)
-                   ).astype(np.float32)
-                  for r, p in zip(r_leaves, encoded.payloads)]
-        return _unflatten(encoded.treedef, leaves)
+        with _tracer().span("codec.decode", codec=self.name):
+            r_leaves, r_def = _flatten(reference)
+            if encoded.treedef != r_def:
+                raise ValueError("encoded/reference structure mismatch")
+            leaves = [(np.asarray(r, np.float32) + self._decode_leaf(p)
+                       ).astype(np.float32)
+                      for r, p in zip(r_leaves, encoded.payloads)]
+            return _unflatten(encoded.treedef, leaves)
 
 
 class QuantCodec(_DeltaCodec):

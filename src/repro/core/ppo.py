@@ -81,6 +81,8 @@ class PPOAgent:
         self.opt_state = opt.init(self.params)
         self.buffer: List[Dict[str, np.ndarray]] = []
         self.reward_history: List[float] = []
+        self.last_update: Optional[Dict[str, float]] = None
+        self.n_updates = 0
         self._act = jax.jit(functools.partial(_act, cfg=cfg),
                             static_argnames=("deterministic",))
         self._update = jax.jit(functools.partial(_ppo_update, cfg=cfg))
@@ -107,7 +109,10 @@ class PPOAgent:
         self.params, self.opt_state, metrics = self._update(
             self.params, self.opt_state, batch)
         self.buffer.clear()
-        return {k: float(v) for k, v in metrics.items()}
+        out = {k: float(v) for k, v in metrics.items()}
+        self.last_update = out
+        self.n_updates += 1
+        return out
 
 
 # --------------------------------------------------------------------- #
@@ -194,21 +199,34 @@ def _ppo_update(params, opt_state, batch, *, cfg: PPOConfig):
         critic_loss = jnp.mean(jnp.square(values - returns))    # Eq. 32
         total = (actor_loss + cfg.value_coef * critic_loss
                  - cfg.entropy_coef * jnp.mean(ent))
-        return total, (actor_loss, critic_loss, jnp.mean(ratio))
+        # observability side channel (repro.obs.rl): approx-KL vs the
+        # behaviour policy, the fraction of ratios the clip bites, and the
+        # policy entropy — all from tensors the loss already computes
+        diag = (jnp.mean(old_logprob - lp),
+                jnp.mean((jnp.abs(ratio - 1.0) > cfg.clip_eps)
+                         .astype(jnp.float32)),
+                jnp.mean(ent))
+        return total, (actor_loss, critic_loss, jnp.mean(ratio), diag)
 
     opt = adamw(cfg.lr)
 
     def epoch(carry, _):
         p, s = carry
-        (loss, (al, cl, ratio)), grads = jax.value_and_grad(
+        (loss, (al, cl, ratio, diag)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(p)
         upd, s = opt.update(grads, s, p)
         p = jax.tree_util.tree_map(lambda a, u: a + u, p, upd)
-        return (p, s), (loss, al, cl, ratio)
+        return (p, s), (loss, al, cl, ratio) + diag
 
-    (params, opt_state), (losses, als, cls, ratios) = jax.lax.scan(
-        epoch, (params, opt_state), None, length=cfg.update_epochs)
+    (params, opt_state), (losses, als, cls, ratios, kls, clips, ents) = \
+        jax.lax.scan(epoch, (params, opt_state), None,
+                     length=cfg.update_epochs)
     metrics = {"loss": losses[-1], "actor_loss": als[-1],
                "critic_loss": cls[-1], "mean_ratio": ratios[-1],
-               "mean_return": jnp.mean(returns)}
+               "mean_return": jnp.mean(returns),
+               # RL diagnostics (DESIGN.md §16): last-epoch policy drift +
+               # pre-normalization advantage spread + value loss alias
+               "approx_kl": kls[-1], "clip_fraction": clips[-1],
+               "entropy": ents[-1], "value_loss": cls[-1],
+               "adv_mean": jnp.mean(adv_raw), "adv_std": jnp.std(adv_raw)}
     return params, opt_state, metrics

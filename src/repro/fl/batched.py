@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.distill import make_mutual_train_fns
 from repro.models.cnn import apply_cnn_fast
+from repro.obs.trace import current as _tracer
 
 
 def next_pow2(n: int) -> int:
@@ -157,11 +158,15 @@ class BatchedClientEngine:
             start = {"local": global_by_size[s], "lite": lite_params}
             stacked = jax.tree_util.tree_map(
                 lambda p: jnp.broadcast_to(p, (Cp,) + p.shape), start)
-            trained = self._trainers[s](stacked, jnp.asarray(xs),
-                                        jnp.asarray(ys), jnp.asarray(mask))
-            # one device->host transfer per group; per-client numpy views
-            # avoid spawning ~10 device slice ops per client
-            host = jax.device_get(trained)
+            # names the group's vmap+scan dispatch both in our tracer (wall
+            # span) and in any active jax.profiler trace
+            with _tracer().annotation(f"train_cohort[{s}]x{Cp}s{S}"):
+                trained = self._trainers[s](stacked, jnp.asarray(xs),
+                                            jnp.asarray(ys),
+                                            jnp.asarray(mask))
+                # one device->host transfer per group; per-client numpy
+                # views avoid spawning ~10 device slice ops per client
+                host = jax.device_get(trained)
             for j, i in enumerate(idx):
                 out[i] = jax.tree_util.tree_map(lambda a: a[j], host)
         return out

@@ -33,6 +33,7 @@ from repro.core.nested import nested_aggregate
 from repro.fl.batched import BatchedClientEngine
 from repro.fl.env import FLEnvironment
 from repro.models.cnn import apply_cnn, init_cnn
+from repro.obs.trace import current as _tracer
 
 
 @dataclass
@@ -51,6 +52,10 @@ class RoundRecord:
     acc_by_size: Dict[str, float]
     client_acc: Dict[int, Dict[str, float]]
     latency_only: bool = False
+    #: per-wave PPO diagnostics (repro.obs.rl) — populated only when
+    #: tracing is enabled, None otherwise (so untraced runs stay
+    #: byte-identical to pre-observability ones)
+    rl_diag: Optional[Dict[str, Dict]] = None
 
 
 @dataclass
@@ -148,6 +153,7 @@ class HAPFLServer:
                                if engine == "batched" else None)
         self.history: List[RoundRecord] = []
         self._round = 0
+        self._last_rl_diag: Optional[Dict[str, Dict]] = None
 
     # ------------------------------------------------------------------ #
     def _client_train(self, client: int, size: str, intensity: int):
@@ -193,6 +199,11 @@ class HAPFLServer:
         """Algorithm-1 steps 1-3 for one cohort: selection, assessment
         times, PPO1 size allocation, PPO2 intensities, simulated local
         times. Consumes the server rng exactly like the legacy round."""
+        with _tracer().span("server.plan_wave", round=self._round,
+                            latency_only=latency_only):
+            return self._plan_wave(clients, latency_only, deterministic)
+
+    def _plan_wave(self, clients, latency_only, deterministic) -> WavePlan:
         env, cfg = self.env, self.env.cfg
         r = self._round
         self._round += 1
@@ -247,6 +258,12 @@ class HAPFLServer:
         """Step 4: real mutual-KD training from the *current* globals (in
         the event-driven sim this is the model state at dispatch time),
         grouped into per-size cohorts by the batched engine."""
+        with _tracer().span("server.train_wave", round=plan.round_idx,
+                            n=len(plan.clients),
+                            latency_only=plan.latency_only):
+            return self._train_wave(plan, eval_accuracy)
+
+    def _train_wave(self, plan: WavePlan, eval_accuracy: bool) -> WavePlan:
         env = self.env
         m = len(plan.clients)
         if plan.latency_only:
@@ -289,6 +306,11 @@ class HAPFLServer:
         per-client wire bytes land in plan.wire_bytes."""
         if self.codec is None or not plan.client_params:
             return
+        with _tracer().span("server.encode_wave", round=plan.round_idx,
+                            n=len(plan.clients), codec=self.codec.name):
+            self._encode_wave_impl(plan)
+
+    def _encode_wave_impl(self, plan: WavePlan) -> None:
         codec, wire = self.codec, []
         for i, c in enumerate(plan.clients):
             size = plan.sizes[i]
@@ -345,6 +367,10 @@ class HAPFLServer:
         synchronous aggregation."""
         if not updates:
             return 0
+        with _tracer().span("server.apply_updates", n=len(updates)):
+            return self._apply_updates(updates, staleness_exponent, mix)
+
+    def _apply_updates(self, updates, staleness_exponent, mix) -> int:
         sizes = [u["size"] for u in updates]
         ents = [u["entropy"] for u in updates]
         accs_lite = [u["acc_lite"] for u in updates]
@@ -383,12 +409,23 @@ class HAPFLServer:
         return len(updates)
 
     def feedback_wave(self, plan: WavePlan):
-        """Step 6: RL rewards (Algorithm 1 lines 22-30)."""
-        rw1 = (self.allocator.feedback(self._pad(plan.local_times),
-                                       self._pad(plan.intensities))
-               if self.use_ppo1 else 0.0)
-        rw2 = (self.intensity.feedback(self._pad(plan.local_times))
-               if self.use_ppo2 else 0.0)
+        """Step 6: RL rewards (Algorithm 1 lines 22-30). With tracing on,
+        also collects both agents' PPO diagnostics (repro.obs.rl), emits
+        them as trace counters, and stages them for `record_wave`."""
+        tr = _tracer()
+        with tr.span("server.feedback_wave", round=plan.round_idx):
+            rw1 = (self.allocator.feedback(self._pad(plan.local_times),
+                                           self._pad(plan.intensities))
+                   if self.use_ppo1 else 0.0)
+            rw2 = (self.intensity.feedback(self._pad(plan.local_times))
+                   if self.use_ppo2 else 0.0)
+        if tr.enabled and (self.use_ppo1 or self.use_ppo2):
+            from repro.obs.rl import wave_diagnostics
+            diag = wave_diagnostics(self)
+            for agent_name, d in diag.items():
+                tr.counter(f"rl.{agent_name}", d)
+            tr.counter("rl.reward", {"ppo1": rw1, "ppo2": rw2})
+            self._last_rl_diag = diag
         return rw1, rw2
 
     def record_wave(self, plan: WavePlan, rw1: float, rw2: float,
@@ -418,7 +455,9 @@ class HAPFLServer:
                             "size": plan.sizes[i]}
                         for i, c in enumerate(plan.clients)},
             latency_only=plan.latency_only,
+            rl_diag=self._last_rl_diag,
         )
+        self._last_rl_diag = None
         self.history.append(rec)
         return rec
 

@@ -13,6 +13,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.kd_loss import kd_loss as _kd
 from repro.kernels.rmsnorm import rmsnorm as _rms
+from repro.obs.trace import current as _tracer
 
 
 def on_tpu() -> bool:
@@ -22,18 +23,23 @@ def on_tpu() -> bool:
 def flash_attention_op(q, k, v, *, causal=True, sliding_window=0,
                        block_q=128, block_k=128):
     """q, k, v: (B, H, S, hd)."""
-    return _flash(q, k, v, causal=causal, sliding_window=sliding_window,
-                  block_q=block_q, block_k=block_k, interpret=not on_tpu())
+    with _tracer().annotation("pallas.flash_attention"):
+        return _flash(q, k, v, causal=causal, sliding_window=sliding_window,
+                      block_q=block_q, block_k=block_k,
+                      interpret=not on_tpu())
 
 
 def kd_loss_op(x_logits, y_logits, labels, *, block_n=256, block_v=512):
     """(N, V) x 2 + (N,) labels -> per-row {ce_x, ce_y, kl_xy, kl_yx}."""
-    return _kd(x_logits, y_logits, labels, block_n=block_n, block_v=block_v,
-               interpret=not on_tpu())
+    with _tracer().annotation("pallas.kd_loss"):
+        return _kd(x_logits, y_logits, labels, block_n=block_n,
+                   block_v=block_v, interpret=not on_tpu())
 
 
 def rmsnorm_op(x, scale, *, block_n=256, eps=1e-5):
-    return _rms(x, scale, block_n=block_n, eps=eps, interpret=not on_tpu())
+    with _tracer().annotation("pallas.rmsnorm"):
+        return _rms(x, scale, block_n=block_n, eps=eps,
+                    interpret=not on_tpu())
 
 
 def mutual_kd_loss(x_logits, y_logits, labels, lambdas=(0.4, 0.6, 0.5, 0.5),

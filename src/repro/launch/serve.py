@@ -62,7 +62,16 @@ def main():
     ap.add_argument("--metrics-out", default="artifacts/serve_metrics.json")
     ap.add_argument("--eval", action="store_true",
                     help="report global test accuracy when the trace ends")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a dual-clock span trace of the run and "
+                         "write Chrome trace-event JSON (open it at "
+                         "https://ui.perfetto.dev)")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        tracer = obs_trace.enable()
 
     horizon = args.events / args.rate_hz
     svc = build_service(
@@ -99,6 +108,10 @@ def main():
                             for k, v in svc.evaluate().items()})
     svc.metrics.dump(args.metrics_out)
     print(f"metrics + event log -> {args.metrics_out}")
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"trace ({len(tracer.events)} events) -> {args.trace} "
+              f"(load at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

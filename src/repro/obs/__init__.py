@@ -1,0 +1,18 @@
+"""Unified telemetry subsystem (DESIGN.md §16): dual-clock span tracing
+with Perfetto export (`repro.obs.trace`), the general metrics registry
+`ServiceMetrics` is built on (`repro.obs.registry`), and per-wave PPO
+diagnostics (`repro.obs.rl`)."""
+from repro.obs.registry import (Counter, CounterVec, Gauge, Histogram,
+                                IntHistogram, MetricsRegistry, Reservoir,
+                                latency_stats)
+from repro.obs.trace import (NULL_TRACER, VIRTUAL, WALL, NullTracer, Tracer,
+                             current, disable, enable, validate_chrome_trace,
+                             wave_timing_summary)
+
+__all__ = [
+    "Counter", "CounterVec", "Gauge", "Histogram", "IntHistogram",
+    "MetricsRegistry", "Reservoir", "latency_stats",
+    "NULL_TRACER", "VIRTUAL", "WALL", "NullTracer", "Tracer",
+    "current", "disable", "enable", "validate_chrome_trace",
+    "wave_timing_summary",
+]

@@ -1,16 +1,25 @@
-"""Observability surface of the parameter service (DESIGN.md §14).
+"""Observability surface of the parameter service (DESIGN.md §14, §16).
 
-One `ServiceMetrics` object per service: rolling counters (dispatches,
-submits, aggregations, expiries, rejects-by-reason), wire-byte totals, a
-staleness histogram, wall-clock latency reservoirs for the dispatch /
-submit / checkpoint paths, and a bounded per-event structured log. The
-deterministic part (counters, histogram, bytes) is checkpointed with the
-service so a restored run reports the same cumulative totals; wall-clock
-latencies and the event log are process-local observability and are not.
+One `ServiceMetrics` object per service, built on the general
+`repro.obs.registry.MetricsRegistry`: rolling counters (dispatches,
+submits, aggregations, expiries, rejects-by-reason) in a CounterVec, wire
+bytes in gauges, the staleness histogram in an IntHistogram, wall-clock
+latency reservoirs for the dispatch / submit / checkpoint paths, and a
+bounded per-event structured log. The deterministic part (counters,
+histogram, bytes) is checkpointed with the service so a restored run
+reports the same cumulative totals; wall-clock latencies and the event
+log are process-local observability and are not. The legacy attribute
+surface (`counts`, `staleness`, `up_bytes`, `dispatch_s`, ...) is kept as
+properties over the registry instruments, and `pack()`/`unpack()` emit
+the exact pre-registry structure, so service checkpoints round-trip
+bit-identically across the refactor (pinned in tests/test_obs.py against
+the committed serve_load artifact schema).
 
 `snapshot()` reports rates over the current *measurement window* —
 `reset_window()` restarts the window (after jit warmup, say) without
-discarding the cumulative counters.
+discarding the cumulative counters. `dump()` is byte-deterministic for
+identical state: sorted keys, floats rounded explicitly, and unexpected
+types raise instead of being silently stringified.
 """
 from __future__ import annotations
 
@@ -18,9 +27,9 @@ import json
 import time
 from collections import Counter, deque
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-import numpy as np
+from repro.obs.registry import MetricsRegistry, latency_stats  # noqa: F401
 
 #: counters describing this *process* (how many times it checkpointed or
 #: restored), not the served stream — excluded from the checkpointed
@@ -28,37 +37,95 @@ import numpy as np
 #: to an uninterrupted one's
 LOCAL_COUNT_KEYS = ("checkpoint", "restore")
 
+#: decimal places `dump()` rounds floats to (event-log + snapshot floats
+#: are already rounded at source; this is the backstop that makes the
+#: artifact byte-stable whatever lands in it)
+DUMP_DECIMALS = 6
 
-def latency_stats(seconds: List[float]) -> Optional[Dict[str, float]]:
-    """p50/p99/mean/max of a latency reservoir, in milliseconds."""
-    if not seconds:
-        return None
-    ms = np.asarray(seconds) * 1e3
-    return {"n": int(ms.size),
-            "p50_ms": round(float(np.percentile(ms, 50)), 3),
-            "p99_ms": round(float(np.percentile(ms, 99)), 3),
-            "mean_ms": round(float(ms.mean()), 3),
-            "max_ms": round(float(ms.max()), 3)}
+
+def _jsonable(obj, _depth: int = 0):
+    """Deterministic JSON sanitizer: rounds floats, passes JSON natives,
+    and *raises* on anything else — `default=str` used to stringify
+    surprises (numpy scalars, arrays) silently and unstably."""
+    if isinstance(obj, bool) or obj is None or isinstance(obj, (int, str)):
+        return obj
+    if isinstance(obj, float):
+        return round(obj, DUMP_DECIMALS)
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v, _depth + 1) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v, _depth + 1) for v in obj]
+    # numpy ints/floats quack via .item(); anything else is a bug upstream
+    item = getattr(obj, "item", None)
+    if callable(item) and getattr(obj, "ndim", 1) == 0:
+        return _jsonable(item(), _depth + 1)
+    raise TypeError(f"non-JSON-serializable metrics value {obj!r} "
+                    f"({type(obj).__name__}) — round/convert it at source")
 
 
 class ServiceMetrics:
-    def __init__(self, event_log_size: int = 2000):
-        self.counts: Counter = Counter()
-        self.staleness: Counter = Counter()      # tau -> n updates applied
-        self.up_bytes = 0.0                      # ingested update wire bytes
-        self.down_bytes = 0.0                    # dispatched reference bytes
-        self.dispatch_s: List[float] = []        # wall secs per dispatch call
-        self.submit_s: List[float] = []          # wall secs per submit call
-        self.checkpoint_s: List[float] = []      # wall secs per checkpoint
+    def __init__(self, event_log_size: int = 2000, reservoir_size: int = 8192,
+                 registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        r = self.registry
+        self._counts = r.counter_vec("service.counts")
+        self._staleness = r.int_histogram("service.staleness")
+        self._up_bytes = r.gauge("service.up_bytes")
+        self._down_bytes = r.gauge("service.down_bytes")
+        self._dispatch = r.reservoir("service.dispatch_s", reservoir_size)
+        self._submit = r.reservoir("service.submit_s", reservoir_size)
+        self._checkpoint = r.reservoir("service.checkpoint_s", reservoir_size)
         self.events: deque = deque(maxlen=event_log_size)
         self.reset_window()
 
+    # legacy attribute surface over the registry instruments ----------- #
+    @property
+    def counts(self) -> Counter:
+        return self._counts.values
+
+    @counts.setter
+    def counts(self, c) -> None:
+        self._counts.values.clear()
+        self._counts.values.update(c)
+
+    @property
+    def staleness(self) -> Counter:
+        return self._staleness.counts
+
+    @property
+    def up_bytes(self) -> float:
+        return self._up_bytes.value
+
+    @up_bytes.setter
+    def up_bytes(self, v: float) -> None:
+        self._up_bytes.value = float(v)
+
+    @property
+    def down_bytes(self) -> float:
+        return self._down_bytes.value
+
+    @down_bytes.setter
+    def down_bytes(self, v: float) -> None:
+        self._down_bytes.value = float(v)
+
+    @property
+    def dispatch_s(self) -> deque:
+        return self._dispatch.samples
+
+    @property
+    def submit_s(self) -> deque:
+        return self._submit.samples
+
+    @property
+    def checkpoint_s(self) -> deque:
+        return self._checkpoint.samples
+
     # ------------------------------------------------------------------ #
     def bump(self, name: str, n: int = 1) -> None:
-        self.counts[name] += n
+        self._counts.inc(name, n)
 
     def note_staleness(self, tau: int) -> None:
-        self.staleness[int(tau)] += 1
+        self._staleness.observe(int(tau))
 
     def log(self, now: float, kind: str, **fields) -> None:
         self.events.append({"t": round(float(now), 6), "event": kind,
@@ -69,9 +136,9 @@ class ServiceMetrics:
         throughput baseline, keeps cumulative counters/bytes/histogram."""
         self._t0 = time.perf_counter()
         self._window_base = Counter(self.counts)
-        self.dispatch_s.clear()
-        self.submit_s.clear()
-        self.checkpoint_s.clear()
+        self._dispatch.reset()
+        self._submit.reset()
+        self._checkpoint.reset()
 
     # ------------------------------------------------------------------ #
     def snapshot(self) -> Dict:
@@ -90,18 +157,21 @@ class ServiceMetrics:
             "down_bytes": round(self.down_bytes, 1),
             "staleness_hist": {str(k): int(v)
                                for k, v in sorted(self.staleness.items())},
-            "dispatch": latency_stats(self.dispatch_s),
-            "submit": latency_stats(self.submit_s),
-            "checkpoint": latency_stats(self.checkpoint_s),
+            "dispatch": self._dispatch.stats(),
+            "submit": self._submit.stats(),
+            "checkpoint": self._checkpoint.stats(),
         }
 
     def dump(self, path) -> None:
-        """Write the snapshot + the structured event log as one artifact."""
+        """Write the snapshot + the structured event log as one artifact.
+        Byte-deterministic for identical state: keys sorted, floats
+        rounded, non-JSON types rejected loudly."""
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(
-            {"snapshot": self.snapshot(), "events": list(self.events)},
-            indent=1, default=str))
+            _jsonable({"snapshot": self.snapshot(),
+                       "events": list(self.events)}),
+            indent=1, sort_keys=True))
 
     # checkpointed (deterministic) slice ------------------------------- #
     def deterministic_counts(self) -> Dict[str, int]:
@@ -119,8 +189,7 @@ class ServiceMetrics:
 
     def unpack(self, state: Dict) -> None:
         self.counts = Counter(state["counts"])
-        self.staleness = Counter({int(k): int(v)
-                                  for k, v in state["staleness"].items()})
+        self._staleness.unpack(state["staleness"])
         self.up_bytes = float(state["up_bytes"])
         self.down_bytes = float(state["down_bytes"])
         self.reset_window()

@@ -47,6 +47,7 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.latency import AvailabilityModel
+from repro.obs.trace import VIRTUAL, current as _tracer
 from repro.sim.policies import make_policy
 
 #: policies with a streaming (apply-on-arrival) ingest path; sync/deadline
@@ -141,6 +142,13 @@ class ParamService:
         """Admit + plan one wave for the given client(s). Ineligible
         clients (already in flight, at capacity, offline) are skipped and
         counted per reason; the returned tickets cover the admitted set."""
+        tr = _tracer()
+        if tr.enabled:
+            tr.set_virtual(now)
+        with tr.span("service.dispatch", now=round(float(now), 6)):
+            return self._dispatch(clients, now)
+
+    def _dispatch(self, clients, now: float) -> List[Ticket]:
         t0 = time.perf_counter()
         self.poll(now)
         if isinstance(clients, (int, np.integer)):
@@ -218,6 +226,14 @@ class ParamService:
         server's codec against the ticket's dispatch-time reference (EF
         residuals persist on the server), tagged with its staleness, and
         applied per the streaming policy."""
+        tr = _tracer()
+        if tr.enabled:
+            tr.set_virtual(now)
+        with tr.span("service.submit", client=int(client)):
+            return self._submit(client, params, now, acc_local, acc_lite)
+
+    def _submit(self, client, params, now, acc_local, acc_lite,
+                ) -> SubmitReceipt:
         t0 = time.perf_counter()
         self.poll(now)
         client = int(client)
@@ -299,6 +315,12 @@ class ParamService:
                              "staleness": taus})
         self.metrics.log(now, "aggregate", version=self.version,
                          n_updates=len(updates), staleness=taus)
+        tr = _tracer()
+        if tr.enabled:
+            tr.counter("service.state",
+                       {"version": self.version, "inflight": self.inflight,
+                        "buffered": len(self.buffer)},
+                       clock=VIRTUAL, t=float(now))
         if (self.checkpoint_every and self.checkpoint_dir
                 and self.version % int(self.checkpoint_every) == 0):
             self.checkpoint()
@@ -313,6 +335,10 @@ class ParamService:
         rejected (`no_ticket`). With a ClientStore the scan is a
         vectorized array pass in the same (deadline, client) order as the
         legacy dict walk."""
+        with _tracer().span("service.poll"):
+            return self._poll(now)
+
+    def _poll(self, now: float) -> int:
         if self.store is not None:
             expired = [self.tickets[int(c)]
                        for c in self.store.expired_clients(now)]
@@ -374,6 +400,12 @@ class ParamService:
         self.metrics.log(now, "wave_done", wave=tk.wave,
                          reward_ppo1=round(float(rw1), 4),
                          reward_ppo2=round(float(rw2), 4))
+        tr = _tracer()
+        if tr.enabled:
+            tr.span_at("wave_barrier", plan.t_dispatch,
+                       max(float(now), plan.t_dispatch), clock=VIRTUAL,
+                       tid=f"wave{tk.wave}", wave=tk.wave,
+                       n=len(plan.clients), expired=int(expired))
 
     # ------------------------------------------------------------------ #
     # inspection

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.latency import (AvailabilityModel, CommModel,
                                 straggling_latency)
+from repro.obs.trace import VIRTUAL, current as _tracer, wave_timing_summary
 from repro.sim.events import (ARRIVAL, ASSESS_DONE, DEADLINE, DROPOUT,
                               REJOIN, Event, EventQueue)
 from repro.sim.policies import SyncPolicy
@@ -67,6 +68,10 @@ class SimResult:
     down_bytes: float = 0.0        # wire bytes of dispatched broadcasts
     acc_curve: List[Tuple[float, float]] = field(default_factory=list)
     records: List[AggRecord] = field(default_factory=list)
+    #: per-wave virtual-time breakdown (assess/local/comm/barrier seconds,
+    #: mean/max/total over waves) from the trace's wave-barrier spans —
+    #: populated only when tracing was enabled for the run, None otherwise
+    timing: Optional[Dict] = None
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -142,6 +147,12 @@ class EventScheduler:
         self._open_waves = 0
         self._max_waves = 0
         self._target: Optional[float] = None
+        # observability (DESIGN.md §16): tracer handle cached here and
+        # refreshed at run() so the per-event loop pays one attribute
+        # lookup when tracing is off; wave-barrier span events (this
+        # scheduler's own, not any other run's) feed SimResult.timing
+        self._tr = _tracer()
+        self._wave_spans: List[Dict] = []
 
     # ------------------------------------------------------------------ #
     def _available(self, client: int) -> bool:
@@ -179,11 +190,14 @@ class EventScheduler:
         if not clients:
             self._guard_stall()
             return False
-        plan = self.server.plan_wave(clients, latency_only=self.latency_only,
-                                     deterministic=self.deterministic)
-        plan.version = self.version
-        plan.t_dispatch = self.t
-        self.server.train_wave(plan, eval_accuracy=self.eval_accuracy)
+        with self._tr.span("sim.dispatch", wave=self._wave_count,
+                           n=len(clients)):
+            plan = self.server.plan_wave(clients,
+                                         latency_only=self.latency_only,
+                                         deterministic=self.deterministic)
+            plan.version = self.version
+            plan.t_dispatch = self.t
+            self.server.train_wave(plan, eval_accuracy=self.eval_accuracy)
         w = self._wave_count
         self._wave_count += 1
         self._open_waves += 1
@@ -210,6 +224,18 @@ class EventScheduler:
             + ups
         t_assess = self.t + downs + np.asarray(plan.assess)
         t_arrive = self.t + offs
+        if self._tr.enabled:
+            # critical-path phase boundaries (cumulative maxima over the
+            # cohort): the wave cannot close before the slowest client
+            # clears each stage — _finish_wave turns these into nested
+            # virtual-clock spans and the assess/local/comm breakdown
+            a = np.asarray(plan.assess)
+            lt = np.asarray(plan.local_times)
+            info["phases"] = (float(np.max(downs)), float(np.max(downs + a)),
+                              float(np.max(downs + a + lt)),
+                              float(np.max(offs)))
+            self._tr.instant("dispatch", clock=VIRTUAL, tid="events",
+                             wave=w, n=m)
         evs = []
         for i, c in enumerate(clients):
             self.inflight[c] = (w, i)
@@ -326,6 +352,8 @@ class EventScheduler:
         rec = self.server.record_wave(
             plan, rw1, rw2, eval_accuracy=self.eval_accuracy and sync,
             wall_time=wall)
+        if self._tr.enabled and "phases" in info:
+            self._emit_wave_spans(w, plan, info)
         if (aggregate and self.records and self.eval_accuracy
                 and not self.latency_only):
             if sync:
@@ -334,6 +362,33 @@ class EventScheduler:
             elif self.version % self.eval_every == 0:
                 self._note_accuracy(self.records[-1])
         self._try_dispatch()
+
+    def _emit_wave_spans(self, w: int, plan, info: Dict) -> None:
+        """Emit the wave's virtual-clock spans at resolution: one parent
+        wave-barrier span (dispatch -> resolution) carrying the
+        assess/local/comm/barrier breakdown SimResult.timing aggregates,
+        plus nested critical-path child spans (download -> assess -> local
+        -> upload, clipped to the resolution time under deadline drops).
+        Each wave gets its own thread row — overlapping open waves under
+        buffered/async would otherwise break Perfetto's slice nesting."""
+        tr = self._tr
+        t0, t1 = plan.t_dispatch, self.t
+        cd, ca, cl, cu = info["phases"]
+        phases = {"assess": ca - cd, "local": cl - ca,
+                  "comm": cd + (cu - cl),
+                  "barrier": max((t1 - t0) - cu, 0.0)}
+        tid = f"wave{w}"
+        # parent first: export's stable sort keeps it ahead of same-ts
+        # children, which is what Perfetto's containment nesting expects
+        ev = tr.span_at("wave_barrier", t0, max(t0, t1), clock=VIRTUAL,
+                        tid=tid, wave=w, n=len(plan.clients),
+                        **{k: round(v, 9) for k, v in phases.items()})
+        self._wave_spans.append(ev)
+        for name, b, e in (("comm_down", 0.0, cd), ("assess", cd, ca),
+                           ("local", ca, cl), ("comm_up", cl, cu)):
+            b, e = t0 + b, min(t0 + e, t1)
+            if e > b:
+                tr.span_at(name, b, e, clock=VIRTUAL, tid=tid)
 
     # ------------------------------------------------------------------ #
     def _on_arrival(self, ev: Event) -> None:
@@ -421,6 +476,7 @@ class EventScheduler:
                 and target_accuracy is None:
             raise ValueError("unbounded run: give waves, max_time, "
                              "max_updates or target_accuracy")
+        tr = self._tr = _tracer()   # refresh: enable() may postdate __init__
         self._try_dispatch()
         handlers = {ARRIVAL: self._on_arrival, DEADLINE: self._on_deadline,
                     DROPOUT: self._on_dropout, REJOIN: self._on_rejoin,
@@ -437,6 +493,13 @@ class EventScheduler:
             self.queue.pop()
             self.n_events += 1
             self.t = ev.time
+            if tr.enabled:   # one attribute lookup on the untraced hot path
+                tr.set_virtual(ev.time)
+                tr.instant(ev.kind, clock=VIRTUAL, tid="events",
+                           client=ev.client, wave=ev.wave)
+                tr.counter("sim.load", {"inflight": len(self.inflight),
+                                        "buffer": len(self.buffer)},
+                           clock=VIRTUAL)
             handlers[ev.kind](ev)
         if self.buffer and self.time_to_target is None:
             self._flush_buffer()       # don't silently waste late updates
@@ -457,4 +520,6 @@ class EventScheduler:
             mean_straggling=float(np.mean(stragg)) if stragg else 0.0,
             final_acc=float(final), time_to_target=self.time_to_target,
             up_bytes=self.up_bytes, down_bytes=self.down_bytes,
-            acc_curve=list(self.acc_curve), records=list(self.records))
+            acc_curve=list(self.acc_curve), records=list(self.records),
+            timing=(wave_timing_summary(self._wave_spans)
+                    if self._tr.enabled else None))

@@ -1,0 +1,364 @@
+"""Observability subsystem (DESIGN.md §16): tracer determinism, zero-cost
+disable, Chrome trace schema, metrics registry, ServiceMetrics parity
+across the registry refactor, deterministic dump, RL diagnostics."""
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+from repro.obs import trace as obs_trace
+from repro.obs.registry import (Counter, CounterVec, Gauge, Histogram,
+                                IntHistogram, MetricsRegistry, Reservoir,
+                                latency_stats)
+from repro.obs.trace import (NULL_TRACER, VIRTUAL, WALL, Tracer,
+                             validate_chrome_trace, wave_timing_summary)
+from repro.service.metrics import ServiceMetrics
+from repro.sim import BufferedPolicy, EventScheduler, SyncPolicy
+
+CFG = FLSimConfig(dataset="mnist", n_train=300, n_test=80, n_clients=8,
+                  k_per_round=4, batches_per_epoch=1, default_epochs=2,
+                  batch_size=16)
+
+
+@pytest.fixture(autouse=True)
+def _tracer_reset():
+    """Every test starts and ends with tracing disabled."""
+    obs_trace.disable()
+    yield
+    obs_trace.disable()
+
+
+def fresh_server(seed=3, **kw):
+    return HAPFLServer(FLEnvironment(CFG), seed=seed, **kw)
+
+
+# --------------------------------------------------------------------- #
+# tracer core
+# --------------------------------------------------------------------- #
+def test_null_tracer_is_default_and_noop():
+    tr = obs_trace.current()
+    assert tr is NULL_TRACER and not tr.enabled
+    with tr.span("x", foo=1) as s1, tr.annotation("y") as s2:
+        assert s1 is s2          # one shared null context manager
+    assert tr.span_at("x", 0, 1) is None
+    assert tr.counter("c", {"v": 1}) is None
+
+
+def test_enable_disable_singleton():
+    t1 = obs_trace.enable()
+    assert obs_trace.current() is t1 and t1.enabled
+    assert obs_trace.enable() is t1          # idempotent
+    t2 = Tracer()
+    assert obs_trace.enable(t2) is t2        # explicit replacement
+    obs_trace.disable()
+    assert obs_trace.current() is NULL_TRACER
+
+
+def test_span_nesting_and_chrome_schema():
+    tr = Tracer()
+    with tr.span("outer", a=1):
+        with tr.span("inner"):
+            pass
+        tr.instant("tick")
+    tr.set_virtual(5.0)
+    tr.counter("load", {"x": 1, "none": None, "nan": float("nan")},
+               clock=VIRTUAL)
+    tr.span_at("wave", 2.0, 7.0, clock=VIRTUAL, tid="waves")
+    stats = validate_chrome_trace(tr.to_chrome())
+    assert stats["n_spans"] == 3 and stats["n_instants"] == 1
+    assert stats["n_counters"] == 1
+    assert stats["pids"] == [1, 2]           # wall + virtual tracks
+    # inner span closed first but sorts inside outer (begin ts ordering)
+    rows = [e for e in tr.to_chrome()["traceEvents"] if e.get("ph") == "X"
+            and e["pid"] == 1]
+    assert [r["name"] for r in rows] == ["outer", "inner"]
+    assert rows[0]["dur"] >= rows[1]["dur"]
+    # counter dropped the None/NaN series but kept the numeric one
+    c = next(e for e in tr.events if e["ph"] == "C")
+    assert c["args"] == {"x": 1.0}
+
+
+def test_export_round_trips_and_validates(tmp_path):
+    tr = Tracer()
+    with tr.span("a"):
+        pass
+    p = tr.export(tmp_path / "t.json")
+    stats = validate_chrome_trace(json.loads(Path(p).read_text()))
+    assert stats["n_spans"] == 1
+
+
+def test_validate_rejects_broken_traces():
+    tr = Tracer()
+    tr.span_at("a", 0.0, 1.0)
+    good = tr.to_chrome()
+    bad = json.loads(json.dumps(good))
+    del bad["traceEvents"][-1]["ts"]
+    with pytest.raises(ValueError, match="missing key"):
+        validate_chrome_trace(bad)
+    bad2 = json.loads(json.dumps(good))
+    bad2["traceEvents"].append(dict(bad2["traceEvents"][-1], ts=-50.0))
+    with pytest.raises(ValueError, match="monotonicity"):
+        validate_chrome_trace(bad2)
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"not": "a trace"})
+
+
+def test_wave_timing_summary():
+    spans = [{"args": {"assess": 1.0, "local": 2.0, "comm": 0.5,
+                       "barrier": 0.25}},
+             {"args": {"assess": 3.0, "local": 4.0, "comm": 1.5,
+                       "barrier": 0.75}},
+             None,                       # skipped agent / null span
+             {"args": {"wave": 1}}]      # no phase breakdown -> filtered
+    out = wave_timing_summary(spans)
+    assert out["n_waves"] == 2
+    assert out["assess"] == {"mean": 2.0, "max": 3.0, "total": 4.0}
+    assert out["barrier"]["total"] == 1.0
+    assert wave_timing_summary([]) is None
+
+
+# --------------------------------------------------------------------- #
+# tracer determinism + zero-cost disable against the simulator
+# --------------------------------------------------------------------- #
+def _traced_sim_run(seed=3, waves=3):
+    tracer = Tracer()
+    obs_trace.enable(tracer)
+    try:
+        srv = fresh_server(seed=seed)
+        sched = EventScheduler(srv, BufferedPolicy(buffer_m=2),
+                               eval_accuracy=False)
+        res = sched.run(waves=waves)
+    finally:
+        obs_trace.disable()
+    return srv, res, tracer
+
+
+def test_virtual_records_deterministic_across_runs():
+    _, res_a, tr_a = _traced_sim_run()
+    _, res_b, tr_b = _traced_sim_run()
+    va, vb = tr_a.virtual_records(), tr_b.virtual_records()
+    assert va and va == vb
+    assert res_a.timing == res_b.timing and res_a.timing is not None
+
+
+def test_tracing_does_not_perturb_the_simulation():
+    """A traced run must be byte-identical to an untraced one on every
+    simulation output (records differ only in the rl_diag side channel)."""
+    srv_a = fresh_server()
+    res_a = EventScheduler(srv_a, SyncPolicy()).run(waves=3)
+    srv_b, res_b, _ = _traced_sim_run_sync()
+    for a, b in zip(srv_a.history, srv_b.history):
+        assert a.rl_diag is None and b.rl_diag is not None
+        da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+        da.pop("rl_diag"), db.pop("rl_diag")
+        assert da == db
+    assert res_a.sim_time == res_b.sim_time
+    assert res_a.timing is None and res_b.timing is not None
+
+
+def _traced_sim_run_sync(seed=3, waves=3):
+    tracer = Tracer()
+    obs_trace.enable(tracer)
+    try:
+        srv = fresh_server(seed=seed)
+        res = EventScheduler(srv, SyncPolicy()).run(waves=waves)
+    finally:
+        obs_trace.disable()
+    return srv, res, tracer
+
+
+def test_sim_trace_has_expected_structure():
+    _, res, tr = _traced_sim_run()
+    trace = tr.to_chrome()
+    stats = validate_chrome_trace(trace)
+    names = {e["name"] for e in trace["traceEvents"]}
+    for want in ("sim.dispatch", "server.plan_wave", "server.train_wave",
+                 "server.feedback_wave", "wave_barrier", "arrival",
+                 "dispatch", "sim.load"):
+        assert want in names, f"missing {want}"
+    assert stats["pids"] == [1, 2]
+    # timing summary totals are consistent with the recorded wave spans
+    assert res.timing["n_waves"] >= 3
+    for phase in ("assess", "local", "comm", "barrier"):
+        assert res.timing[phase]["max"] >= 0.0
+
+
+# --------------------------------------------------------------------- #
+# metrics registry
+# --------------------------------------------------------------------- #
+def test_registry_instruments_roundtrip():
+    r = MetricsRegistry()
+    r.counter("c").inc(2.5)
+    r.counter_vec("cv").inc("a", 3)
+    r.gauge("g").set(7.0)
+    r.int_histogram("ih").observe(4)
+    h = r.histogram("h", edges=(1.0, 10.0))
+    h.observe(0.5), h.observe(5.0), h.observe(50.0)
+    r.reservoir("res").observe(0.25)
+    state = r.pack()
+    assert "res" not in state                 # reservoirs excluded by default
+    assert state == {"c": 2.5, "cv": {"a": 3}, "g": 7.0, "ih": {"4": 1},
+                     "h": {"edges": [1.0, 10.0], "buckets": [1, 1, 1],
+                           "sum": 55.5, "count": 3}}
+    r2 = MetricsRegistry()
+    r2.counter("c"), r2.counter_vec("cv"), r2.gauge("g")
+    r2.int_histogram("ih"), r2.histogram("h", edges=(1.0, 10.0))
+    r2.unpack(state)
+    assert r2.pack() == state
+    assert json.dumps(r2.pack(), sort_keys=True) == \
+        json.dumps(state, sort_keys=True)
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    r = MetricsRegistry()
+    c = r.counter("x")
+    assert r.counter("x") is c
+    with pytest.raises(ValueError, match="already registered"):
+        r.gauge("x")
+    with pytest.raises(KeyError, match="unknown instrument"):
+        r.unpack({"nope": 1})
+    assert "x" in r and r["x"] is c and r.names() == ["x"]
+
+
+def test_histogram_edge_mismatch_and_reservoir_bound():
+    h = Histogram("h", edges=(1.0, 2.0))
+    with pytest.raises(ValueError, match="edge mismatch"):
+        h.unpack({"edges": [1.0, 3.0], "buckets": [0, 0, 0], "sum": 0.0,
+                  "count": 0})
+    with pytest.raises(ValueError, match="sorted"):
+        Histogram("bad", edges=(2.0, 1.0))
+    res = Reservoir("r", maxlen=4)
+    for i in range(10):
+        res.observe(float(i))
+    assert list(res.samples) == [6.0, 7.0, 8.0, 9.0]
+    assert res.stats()["n"] == 4
+    assert latency_stats([]) is None
+
+
+# --------------------------------------------------------------------- #
+# ServiceMetrics: parity across the registry refactor + dump determinism
+# --------------------------------------------------------------------- #
+def _exercised_metrics():
+    m = ServiceMetrics()
+    m.bump("dispatch", 3)
+    m.bump("submit", 2)
+    m.bump("checkpoint")          # LOCAL_COUNT_KEYS: not checkpointed
+    m.note_staleness(0)
+    m.note_staleness(2)
+    m.up_bytes += 123.456
+    m.down_bytes += 7.0
+    m.dispatch_s.append(0.001)
+    m.submit_s.append(0.002)
+    m.log(1.5, "dispatch", client=4)
+    return m
+
+
+def test_service_metrics_pack_schema_unchanged():
+    """pack() must emit the exact pre-registry structure — service
+    checkpoints round-trip bit-identically across the refactor."""
+    m = _exercised_metrics()
+    state = m.pack()
+    assert sorted(state) == ["counts", "down_bytes", "staleness", "up_bytes"]
+    assert state["counts"] == {"dispatch": 3, "submit": 2}   # no 'checkpoint'
+    assert state["staleness"] == {"0": 1, "2": 1}
+    assert isinstance(state["up_bytes"], float)
+    m2 = ServiceMetrics()
+    m2.unpack(json.loads(json.dumps(state)))      # via-JSON round trip
+    assert json.dumps(m2.pack(), sort_keys=True) == \
+        json.dumps(state, sort_keys=True)
+
+
+def test_service_metrics_snapshot_keys_match_committed_artifact():
+    """The snapshot surface bench_serve reads must keep serving the keys
+    recorded in the committed serve_load artifact."""
+    art = Path(__file__).resolve().parents[1] / "artifacts" / "bench" / \
+        "serve_load.json"
+    row = next(iter(json.loads(art.read_text()).values()))
+    snap = _exercised_metrics().snapshot()
+    for key in ("updates_per_sec", "aggregations_per_sec", "staleness_hist",
+                "dispatch", "submit", "checkpoint", "up_bytes",
+                "down_bytes"):
+        assert key in snap and key in row
+    assert snap["dispatch"]["n"] == 1
+
+
+def test_dump_is_byte_deterministic(tmp_path, monkeypatch):
+    monkeypatch.setattr(time, "perf_counter", lambda: 42.0)
+    m = _exercised_metrics()
+    m.snapshot()["counts"]["dispatch"]            # reads don't mutate
+    m.dump(tmp_path / "a.json")
+    m.dump(tmp_path / "b.json")
+    a = (tmp_path / "a.json").read_bytes()
+    assert a == (tmp_path / "b.json").read_bytes()
+    # fresh but identically-exercised state dumps the same bytes
+    m2 = _exercised_metrics()
+    m2.dump(tmp_path / "c.json")
+    assert a == (tmp_path / "c.json").read_bytes()
+    # keys are sorted and floats rounded (no default=str stringification)
+    data = json.loads(a)
+    assert list(data) == ["events", "snapshot"]
+    assert data["snapshot"]["up_bytes"] == 123.5   # round(…, 1) at source
+
+
+def test_dump_rejects_non_json_types(tmp_path):
+    m = ServiceMetrics()
+    m.events.append({"t": 0.0, "event": "bad", "arr": np.arange(3)})
+    with pytest.raises(TypeError, match="non-JSON-serializable"):
+        m.dump(tmp_path / "x.json")
+    # 0-dim numpy scalars are fine (converted via .item())
+    m.events.clear()
+    m.log(0.0, "ok", v=float(np.float64(1.25)))
+    m.events.append({"t": 0.0, "event": "ok2", "v": np.float32(0.5)})
+    m.dump(tmp_path / "y.json")
+    assert json.loads((tmp_path / "y.json").read_text())
+
+
+# --------------------------------------------------------------------- #
+# RL diagnostics
+# --------------------------------------------------------------------- #
+def test_ppo_update_metrics_carry_diagnostics():
+    srv = fresh_server()
+    # buffer_size waves fill the buffer and trigger one PPO update
+    B = srv.allocator.agent.cfg.buffer_size
+    srv.pretrain_rl(B + 1)
+    for agent in (srv.allocator.agent, srv.intensity.agent):
+        assert agent.n_updates >= 1
+        last = agent.last_update
+        for k in ("loss", "approx_kl", "clip_fraction", "entropy",
+                  "value_loss", "adv_mean", "adv_std"):
+            assert k in last and np.isfinite(last[k])
+
+
+def test_rl_diag_lands_on_round_records_when_traced():
+    tracer = Tracer()
+    obs_trace.enable(tracer)
+    try:
+        srv = fresh_server()
+        B = srv.allocator.agent.cfg.buffer_size
+        srv.pretrain_rl(B + 1)
+    finally:
+        obs_trace.disable()
+    first, last = srv.history[0], srv.history[-1]
+    assert set(first.rl_diag) == {"ppo1", "ppo2"}
+    # pre-update waves: entropy/reward flow, update metrics still None
+    assert first.rl_diag["ppo1"]["approx_kl"] is None
+    assert isinstance(first.rl_diag["ppo1"]["entropy"], float)
+    # post-update waves carry the optimizer-side diagnostics
+    d = last.rl_diag["ppo2"]
+    assert d["n_updates"] >= 1.0
+    for k in ("approx_kl", "clip_fraction", "adv_mean", "adv_std",
+              "value_loss"):
+        assert isinstance(d[k], float), k
+    # and the same numbers were emitted as trace counters
+    names = {e["name"] for e in tracer.events if e["ph"] == "C"}
+    assert {"rl.ppo1", "rl.ppo2", "rl.reward"} <= names
+
+
+def test_untraced_rounds_have_no_rl_diag():
+    srv = fresh_server()
+    srv.run(2)
+    assert all(r.rl_diag is None for r in srv.history)
