@@ -13,9 +13,10 @@ test-slow:
 
 ## fast benchmark smoke: kernels + latency figures + engine throughput
 ## + cross-size aggregation comparison + codec sweep + service load
-## + population-scale simulation + traced-run observability schema check
+## + population-scale simulation + mesh-sharded engine scaling
+## + traced-run observability schema check
 bench-smoke:
-	$(PYPATH) $(PY) benchmarks/run.py --quick --only kernels,roofline,latency,cross_size,comm,serve,population,obs
+	$(PYPATH) $(PY) benchmarks/run.py --quick --only kernels,roofline,latency,cross_size,comm,serve,population,mesh,obs
 
 ## bench-regression gate: fail if any policy's sync-relative time-to-target
 ## regressed >25% vs the committed baseline (see benchmarks/check_regression.py)
@@ -30,8 +31,9 @@ bench:
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
 	PYTHONPATH=src $(PY) -c "import repro, repro.fl, repro.fl.batched, \
-repro.comm, repro.core, repro.core.nested, repro.core.population, \
-repro.data, repro.kernels, repro.models, repro.launch, repro.obs, \
+repro.fl.sharded, repro.comm, repro.core, repro.core.nested, \
+repro.core.population, repro.data, repro.kernels, repro.kernels.sharded, \
+repro.models, repro.launch, repro.launch.mesh, repro.obs, \
 repro.obs.rl, repro.optim, repro.serve, repro.service, repro.sim, \
 repro.train, repro.utils.proptest"
 	@echo lint OK

@@ -43,6 +43,18 @@ BASELINE = BENCH / "baselines" / "async_modes.json"
 MIN_EPS_RATIO = 0.5
 MAX_STORE_BYTES_PER_CLIENT = 400.0
 
+# mesh-sharding gate floors (absolute invariants over mesh_scaling.json,
+# docs/sharding.md §5): these guard against PATHOLOGICAL sharding
+# overhead (e.g. an accidental per-step collective), not the scaling
+# assertion itself — the committed artifact records the measured curve.
+# When the host has at least as many cores as simulated devices, the
+# shards genuinely run in parallel and the max-device throughput must
+# hold >= MESH_MIN_SPEEDUP x single-device; with fewer cores every shard
+# multiplexes the same core(s) (the artifact's host.note says so) and
+# only the looser oversubscription floor applies.
+MESH_MIN_SPEEDUP = 0.5
+MESH_MIN_SPEEDUP_OVERSUBSCRIBED = 0.1
+
 
 def check_population(bench_dir: Path) -> list:
     """Scale invariants over artifacts/bench/population[_quick].json.
@@ -78,6 +90,37 @@ def check_population(bench_dir: Path) -> list:
         else:
             print(f"  population n={n}: {bpc:.0f} bytes/client, "
                   f"peak {row['peak_traced_mb']} MB traced ok")
+    return failures
+
+
+def check_mesh(bench_dir: Path) -> list:
+    """Sharding-overhead invariants over mesh_scaling[_quick].json.
+    Quick (bench-smoke) artifact is preferred when both exist; a missing
+    artifact skips the check with a note, like the population gate."""
+    failures = []
+    path = next((p for p in (bench_dir / "mesh_scaling_quick.json",
+                             bench_dir / "mesh_scaling.json") if p.exists()),
+                None)
+    if path is None:
+        print("  mesh: no artifact — skipped (run bench_mesh)")
+        return failures
+    data = json.loads(path.read_text())
+    devices = data["scaling"]["devices"]
+    max_d = max(devices)
+    speedup = data["scaling"]["speedup_vs_1"][str(max_d)]
+    cores = data["host"]["cpu_count"]
+    floor = (MESH_MIN_SPEEDUP if cores and cores >= max_d
+             else MESH_MIN_SPEEDUP_OVERSUBSCRIBED)
+    regime = ("parallel" if cores and cores >= max_d
+              else f"oversubscribed ({cores} core(s))")
+    status = "FAIL" if speedup < floor else "ok"
+    print(f"  mesh speedup at {max_d} devices: {speedup:.2f}x "
+          f"(floor {floor}, {regime}) {status} [{path.name}]")
+    if speedup < floor:
+        failures.append(f"mesh: sharded-engine throughput at {max_d} "
+                        f"devices fell to {speedup:.2f}x of single-device "
+                        f"(floor {floor}, {regime} regime) — pathological "
+                        f"sharding overhead")
     return failures
 
 
@@ -147,6 +190,7 @@ def main(argv=None) -> int:
                             f"{b:.3f} -> {c:.3f} (+{rel:.1%} > "
                             f"{args.tolerance:.0%} tolerance)")
     failures += check_population(args.current.parent)
+    failures += check_mesh(args.current.parent)
     if failures:
         print("\nbench regression gate FAILED:", file=sys.stderr)
         for f in failures:

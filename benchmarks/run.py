@@ -13,6 +13,7 @@ artifacts/bench/. Budget knobs keep the default full run CPU-tractable;
   (ours)      bench_population  100k-client SoA simulation (events/sec, mem)
   fig24       bench_scalability 20/100-client model-allocation scaling
   fig25       bench_ablation    fixed-size / fixed-intensity ablations
+  (ours)      bench_mesh        sharded engine rounds/sec vs device count
   (ours)      bench_roofline    dry-run roofline table
   (ours)      bench_kernels     kernel traffic models / CPU timings
   (ours)      bench_obs         traced sim/service run -> Perfetto trace
@@ -32,8 +33,8 @@ def main() -> None:
                     help="tiny budgets (CI smoke)")
     ap.add_argument("--only", default="",
                     help="comma list: rl,accuracy,cross_size,latency,comm,"
-                         "serve,population,scalability,ablation,roofline,"
-                         "kernels,obs")
+                         "serve,population,mesh,scalability,ablation,"
+                         "roofline,kernels,obs")
     ap.add_argument("--datasets", default="mnist",
                     help="comma list for accuracy bench")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
@@ -122,6 +123,17 @@ def main() -> None:
             populations=(1_000, 10_000) if q else (1_000, 10_000, 100_000),
             waves=20 if q else 60,
             artifact_name="population_quick" if q else "population"))
+    if want("mesh"):
+        from benchmarks import bench_mesh
+        # quick mode writes mesh_scaling_quick.json: the committed
+        # artifacts/bench/mesh_scaling.json is the full 64-client curve
+        # and must not be clobbered by a smoke run. Each device count is
+        # its own subprocess (XLA fixes the host device count at init).
+        run("mesh", lambda: bench_mesh.main(
+            device_counts=(1, 2, 4),
+            n_clients=16 if q else 64, rounds=2 if q else 3,
+            kd_rows=128 if q else 512, kd_vocab=512 if q else 2048,
+            artifact_name="mesh_scaling_quick" if q else "mesh_scaling"))
     if want("scalability"):
         from benchmarks import bench_scalability
         run("scalability", lambda: bench_scalability.main(

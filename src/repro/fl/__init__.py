@@ -2,3 +2,4 @@ from repro.fl.env import FLEnvironment, FLSimConfig, PopulationEnv
 from repro.fl.server import HAPFLServer, RoundRecord, WavePlan
 from repro.fl.baselines import BaselineRunner, BaselineRecord
 from repro.fl.batched import BatchedClientEngine
+from repro.fl.sharded import ShardedClientEngine

@@ -48,16 +48,15 @@ def masked_select(new, old, keep):
         lambda a, b: jnp.where(keep, a, b), new, old)
 
 
-def make_batched_trainer(raw_step, init_opt, unroll: int = 4):
-    """Compile (stacked_params, xs, ys, mask) -> trained stacked_params.
-
-    raw_step/init_opt are the un-jitted fns from make_mutual_train_fns.
-    Shapes: xs (C, S, B, ...), ys (C, S, B), mask (C, S) bool; params leaves
-    carry a leading client axis C. One XLA dispatch trains the whole group.
+def make_train_one(raw_step, init_opt, unroll: int = 4):
+    """One client's (params, xs, ys, mask) -> trained params: a scan over the
+    prefetched step sequence with masked-step updates dropped. The shared
+    building block of the batched (vmap) and sharded (vmap-under-mesh)
+    trainers — both engines run EXACTLY this per-client computation, which
+    is why their parity is a property, not a tolerance hunt.
     `unroll` partially unrolls the step scan — XLA CPU loses intra-op
     parallelism inside while-loop bodies, so straight-lining a few steps
-    recovers it at modest compile cost.
-    """
+    recovers it at modest compile cost."""
     def train_one(params, xs, ys, mask):
         opt_state = init_opt(params)
 
@@ -72,7 +71,17 @@ def make_batched_trainer(raw_step, init_opt, unroll: int = 4):
                                       unroll=min(unroll, xs.shape[0]))
         return params
 
-    return jax.jit(jax.vmap(train_one))
+    return train_one
+
+
+def make_batched_trainer(raw_step, init_opt, unroll: int = 4):
+    """Compile (stacked_params, xs, ys, mask) -> trained stacked_params.
+
+    raw_step/init_opt are the un-jitted fns from make_mutual_train_fns.
+    Shapes: xs (C, S, B, ...), ys (C, S, B), mask (C, S) bool; params leaves
+    carry a leading client axis C. One XLA dispatch trains the whole group.
+    """
+    return jax.jit(jax.vmap(make_train_one(raw_step, init_opt, unroll)))
 
 
 def scan_train(raw_step, init_opt):
@@ -116,7 +125,26 @@ class BatchedClientEngine:
                     lambda p, x, cc: apply_cnn_fast(p, cc, x),
                     cc=env.lite_cfg),
                 lr=lr)
-            self._trainers[s] = make_batched_trainer(raw, init_opt)
+            self._trainers[s] = self._build_trainer(raw, init_opt)
+
+    # hooks the mesh-sharded subclass (fl/sharded.py) overrides ---------- #
+    def _build_trainer(self, raw_step, init_opt):
+        return make_batched_trainer(raw_step, init_opt)
+
+    def _client_pad(self, n: int) -> int:
+        """Padded client-axis length for an n-client group."""
+        return max(next_pow2(n), 4)
+
+    def _dispatch(self, size: str, start, xs, ys, mask):
+        """Run one size group's trainer. `start` is the unstacked {local,
+        lite} param pytree; data arrays carry the padded client axis."""
+        stacked = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p, (xs.shape[0],) + p.shape), start)
+        return self._trainers[size](stacked, jnp.asarray(xs),
+                                    jnp.asarray(ys), jnp.asarray(mask))
+
+    def _group_label(self, size: str, Cp: int, S: int) -> str:
+        return f"train_cohort[{size}]x{Cp}s{S}"
 
     def train_cohort(self, clients: Sequence[int], sizes: Sequence[str],
                      intensities: Sequence[int], global_by_size: Dict,
@@ -146,7 +174,7 @@ class BatchedClientEngine:
             xs, ys, mask = env.prefetch_round([clients[i] for i in idx],
                                               steps, pad_to=S)
             C = len(idx)
-            Cp = max(next_pow2(C), 4) if pad_clients else C
+            Cp = self._client_pad(C) if pad_clients else C
             if Cp > C:
                 pad = Cp - C
                 xs = np.concatenate(
@@ -156,14 +184,10 @@ class BatchedClientEngine:
                 mask = np.concatenate(
                     [mask, np.zeros((pad,) + mask.shape[1:], mask.dtype)])
             start = {"local": global_by_size[s], "lite": lite_params}
-            stacked = jax.tree_util.tree_map(
-                lambda p: jnp.broadcast_to(p, (Cp,) + p.shape), start)
             # names the group's vmap+scan dispatch both in our tracer (wall
             # span) and in any active jax.profiler trace
-            with _tracer().annotation(f"train_cohort[{s}]x{Cp}s{S}"):
-                trained = self._trainers[s](stacked, jnp.asarray(xs),
-                                            jnp.asarray(ys),
-                                            jnp.asarray(mask))
+            with _tracer().annotation(self._group_label(s, Cp, S)):
+                trained = self._dispatch(s, start, xs, ys, mask)
                 # one device->host transfer per group; per-client numpy
                 # views avoid spawning ~10 device slice ops per client
                 host = jax.device_get(trained)

@@ -84,11 +84,20 @@ class HAPFLServer:
                  weighted_agg: bool = True,
                  lr_ppo1: float = 2e-3, lr_ppo2: float = 3e-4,
                  engine: str = "auto", aggregation: str = "group",
-                 codec=None, client_store: bool = True):
+                 codec=None, client_store: bool = True, mesh=None):
         # paper Table II: lr1=0.02 — unstable for Adam on our tiny actor
         # (PPO1 reward degrades); 2e-3 learns cleanly (DESIGN.md §8).
-        if engine not in ("auto", "batched", "sequential"):
+        if engine not in ("auto", "batched", "sequential", "sharded"):
             raise ValueError(f"unknown engine {engine!r}")
+        # an explicit mesh selects the mesh-sharded cohort engine
+        # (fl/sharded.py, DESIGN.md §17) unless the caller pinned another
+        # one; engine="sharded" without a mesh spans all local devices
+        if mesh is not None and engine == "auto":
+            engine = "sharded"
+        if mesh is not None and engine not in ("sharded",):
+            raise ValueError(f"mesh= requires engine='sharded' (got "
+                             f"{engine!r})")
+        self.mesh = mesh
         if aggregation not in ("group", "cross_size"):
             raise ValueError(f"unknown aggregation {aggregation!r}")
         # update codec (repro.comm, DESIGN.md §13): every client update is
@@ -148,9 +157,16 @@ class HAPFLServer:
                                   cc=env.lite_cfg),
                 lr=cfg.lr)
             self._steps[s] = (step, init_opt)
-        # batched engine: one vmap+scan dispatch per size group per round
-        self.batched_engine = (BatchedClientEngine(env, lr=cfg.lr)
-                               if engine == "batched" else None)
+        # cohort engine: one vmap+scan dispatch per size group per round
+        # (batched), optionally client-sharded over a device mesh (sharded)
+        if engine == "sharded":
+            from repro.fl.sharded import ShardedClientEngine
+            self.batched_engine = ShardedClientEngine(env, mesh=mesh,
+                                                      lr=cfg.lr)
+            self.mesh = self.batched_engine.mesh
+        else:
+            self.batched_engine = (BatchedClientEngine(env, lr=cfg.lr)
+                                   if engine == "batched" else None)
         self.history: List[RoundRecord] = []
         self._round = 0
         self._last_rl_diag: Optional[Dict[str, Dict]] = None
@@ -271,7 +287,7 @@ class HAPFLServer:
             plan.accs_local = [0.0] * m
             plan.accs_lite = [0.0] * m
             return plan
-        if self.engine == "batched":
+        if self.engine in ("batched", "sharded"):
             plan.client_params = self.batched_engine.train_cohort(
                 plan.clients, plan.sizes, plan.intensities,
                 self.global_by_size, self.lite_params)

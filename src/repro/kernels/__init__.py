@@ -5,3 +5,6 @@
 # ops.py = jit'd wrappers (interpret=True off-TPU); ref.py = pure-jnp oracles.
 from repro.kernels.ops import (flash_attention_op, kd_loss_op, rmsnorm_op,
                                mutual_kd_loss, on_tpu)
+# sharded.py = shard_map'd row/batch-parallel wrappers over a device mesh
+from repro.kernels.sharded import (sharded_flash_attention, sharded_kd_loss,
+                                   sharded_rmsnorm)
