@@ -14,9 +14,9 @@ test-slow:
 ## fast benchmark smoke: kernels + latency figures + engine throughput
 ## + cross-size aggregation comparison + codec sweep + service load
 ## + population-scale simulation + mesh-sharded engine scaling
-## + traced-run observability schema check
+## + traced-run observability schema check + fleet health report
 bench-smoke:
-	$(PYPATH) $(PY) benchmarks/run.py --quick --only kernels,roofline,latency,cross_size,comm,serve,population,mesh,obs
+	$(PYPATH) $(PY) benchmarks/run.py --quick --only kernels,roofline,latency,cross_size,comm,serve,population,mesh,obs,health
 
 ## bench-regression gate: fail if any policy's sync-relative time-to-target
 ## regressed >25% vs the committed baseline (see benchmarks/check_regression.py)
@@ -34,6 +34,7 @@ lint:
 repro.fl.sharded, repro.comm, repro.core, repro.core.nested, \
 repro.core.population, repro.data, repro.kernels, repro.kernels.sharded, \
 repro.models, repro.launch, repro.launch.mesh, repro.obs, \
-repro.obs.rl, repro.optim, repro.serve, repro.service, repro.sim, \
+repro.obs.rl, repro.obs.health, repro.obs.slo, repro.obs.export, \
+repro.obs.report, repro.optim, repro.serve, repro.service, repro.sim, \
 repro.train, repro.utils.proptest"
 	@echo lint OK

@@ -1,0 +1,165 @@
+"""Fleet health analytics bench (DESIGN.md §16), emitted to
+artifacts/bench/fleet_health.md + fleet_health.json.
+
+Two sections feed one `repro.obs.report` fleet health report:
+
+  1. Event-driven simulation under churn — comm links + availability
+     on/off cycles + real PPO agents, with a `FleetHealth` attached to
+     the `EventScheduler`: per-wave straggler *phase attribution*
+     (assess / local / comm / barrier), EWMA drift baselines,
+     per-size-group turnaround percentiles, churn outcome counters, and
+     the virtual-clock sim SLOs (straggling p95) evaluated on the
+     finished `SimResult`. Every wave row must name a dominant phase —
+     that invariant is asserted here, not just rendered.
+  2. Parameter-service churn load — the bench_serve Poisson replay with
+     `health=True` and the service SLOs attached, so the rolling-window
+     burn-rate machinery is exercised on the live `poll()` path (status
+     gauges + transition events land in the metrics registry, and the
+     Prometheus exposition of that registry is round-trip checked).
+
+The wall-latency SLO thresholds are deliberately generous smoke
+ceilings (jit warmup spikes sit in the reservoirs), while the
+staleness / straggling SLOs are virtual-clock and machine-independent.
+`benchmarks/check_regression.py` reads the JSON sibling and fails on
+any SLO row with status "breach"; quick runs write
+fleet_health_quick.* (ignored) so the committed artifact records a
+full-budget run.
+"""
+from __future__ import annotations
+
+from benchmarks.common import BENCH_DIR, Timer, emit
+from repro.core.latency import AvailabilityModel, make_comm_model
+from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+from repro.obs.export import parse_prometheus_text, prometheus_text
+from repro.obs.health import PHASES, FleetHealth
+from repro.obs.slo import default_service_slos, default_sim_slos
+from repro.sim import EventScheduler, make_policy
+
+#: generous wall-latency smoke ceilings (ms) — see module docstring
+DISPATCH_P99_MS = 5000.0
+SUBMIT_P99_MS = 10000.0
+STALENESS_P95 = 16.0
+STRAGGLING_P95_S = 2000.0
+
+
+def _sim_section(waves: int, n_clients: int, seed: int):
+    cfg = FLSimConfig(dataset="mnist", n_clients=n_clients, k_per_round=4,
+                      n_train=16 * n_clients, n_test=64,
+                      batches_per_epoch=1, default_epochs=4, batch_size=8,
+                      max_speed_ratio=10.0, seed=seed)
+    env = FLEnvironment(cfg)
+    srv = HAPFLServer(env, seed=seed)
+    comm = make_comm_model(
+        {s: float(c.num_params()) for s, c in env.pool.items()},
+        float(env.lite_cfg.num_params()), n_clients, mean_mbps=50.0,
+        seed=seed)
+    av = AvailabilityModel(n_clients, mean_on=400.0, mean_off=100.0,
+                           seed=seed)
+    sched = EventScheduler(srv, make_policy("buffered", buffer_m=2),
+                           comm=comm, availability=av, latency_only=True,
+                           eval_accuracy=False,
+                           health=FleetHealth(n_clients))
+    with Timer() as t:
+        res = sched.run(waves=waves)
+
+    health = res.health
+    if health is None or health["n_waves"] < 1:
+        raise AssertionError(f"FleetHealth not populated: {health}")
+    # the tentpole invariant: every recorded wave attributes its
+    # straggler to one dominant phase
+    bad = [r for r in health["waves"] if r["dominant_phase"] not in PHASES]
+    if bad:
+        raise AssertionError(f"waves without a dominant phase: {bad}")
+    slos = default_sim_slos(straggling_p95=STRAGGLING_P95_S)
+    slos.evaluate(result=res)
+
+    att = health["attribution"]["straggler_dominant_waves"]
+    dom = max(att, key=att.get)
+    emit("health_sim", t.seconds * 1e6 / max(res.n_events, 1),
+         f"waves={res.n_waves}_dominant={dom}"
+         f"_seen={health['clients_seen']}/{health['n_clients']}"
+         f"_slo={slos.worst_status()}")
+    return {
+        "label": f"event-driven sim under churn ({n_clients} clients, "
+                 f"{res.n_waves} waves, buffered)",
+        "health": health, "result": res, "slo": slos,
+        "meta": {"n_clients": n_clients, "waves": res.n_waves,
+                 "policy": "buffered", "seed": seed,
+                 "mean_mbps": 50.0, "latency_only": True},
+    }
+
+
+def _service_section(n_events: int, n_clients: int, k_per_round: int,
+                     rate_hz: float, seed: int):
+    from repro.service import LoadGenerator, ParamService, poisson_trace
+    cfg = FLSimConfig(dataset="mnist", n_clients=n_clients,
+                      k_per_round=k_per_round, n_train=16 * n_clients,
+                      n_test=128, batches_per_epoch=1, default_epochs=8,
+                      batch_size=16, max_speed_ratio=10.0, seed=seed)
+    env = FLEnvironment(cfg)
+    srv = HAPFLServer(env, seed=seed)
+    horizon = n_events / rate_hz
+    av = AvailabilityModel(n_clients, mean_on=horizon / 4.0,
+                           mean_off=horizon / 10.0, seed=seed)
+    slos = default_service_slos(dispatch_p99_ms=DISPATCH_P99_MS,
+                                submit_p99_ms=SUBMIT_P99_MS,
+                                staleness_p95=STALENESS_P95)
+    svc = ParamService(srv, policy="async", availability=av,
+                       max_inflight=k_per_round,
+                       min_deadline=1.5 * n_clients / rate_hz,
+                       health=True, slos=slos, slo_every=5.0)
+    trace = poisson_trace(n_events, n_clients, rate_hz, seed=seed)
+    with Timer() as t:
+        snap = LoadGenerator(svc, trace, seed=seed).replay()
+
+    rows = svc.slos.report()
+    checked = [r for r in rows if r["checks"] > 0]
+    if not checked:
+        raise AssertionError("service SLOs were never evaluated — "
+                             "poll() gating broke")
+    # the status gauges poll() maintains must survive the Prometheus
+    # round trip alongside the deterministic counters
+    parsed = parse_prometheus_text(prometheus_text(svc.metrics.registry))
+    for row in checked:
+        g = f"hapfl_slo_{row['name']}_burn_rate"
+        if g not in parsed:
+            raise AssertionError(f"SLO gauge {g} missing from exposition")
+    for key, v in svc.metrics.counts.items():
+        got = parsed["hapfl_service_counts_total"].get((("key", key),))
+        if got != float(v):
+            raise AssertionError(f"counter {key} diverged in exposition: "
+                                 f"{got} != {v}")
+
+    emit("health_service_slo", t.seconds * 1e6 / max(n_events, 1),
+         f"events={n_events}_checks={sum(r['checks'] for r in rows)}"
+         f"_worst={svc.slos.worst_status()}"
+         f"_expired={snap['counts'].get('expired', 0)}")
+    return {
+        "label": f"parameter-service churn load (async, {n_events} "
+                 f"events, {n_clients} clients)",
+        "health": svc.health, "slo": svc.slos, "store": svc.store,
+        "meta": {"n_clients": n_clients, "k_per_round": k_per_round,
+                 "events": n_events, "rate_hz": rate_hz, "seed": seed,
+                 "policy": "async", "slo_every_s": 5.0,
+                 "updates_per_sec": snap["updates_per_sec"]},
+    }
+
+
+def main(waves: int = 30, n_clients: int = 24, n_events: int = 600,
+         service_clients: int = 32, k_per_round: int = 8,
+         rate_hz: float = 2.0, seed: int = 0,
+         artifact_name: str = "fleet_health", out_md=None):
+    from repro.obs.report import write_health_report
+    sections = [
+        _sim_section(waves, n_clients, seed),
+        _service_section(n_events, service_clients, k_per_round, rate_hz,
+                         seed),
+    ]
+    md_path, json_path = write_health_report(
+        out_md if out_md else BENCH_DIR / f"{artifact_name}.md", sections)
+    print(f"# fleet health report -> {md_path} (+ {json_path})")
+    return sections
+
+
+if __name__ == "__main__":
+    main()

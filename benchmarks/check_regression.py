@@ -124,6 +124,41 @@ def check_mesh(bench_dir: Path) -> list:
     return failures
 
 
+def check_slo(bench_dir: Path) -> list:
+    """SLO gate over the fleet health report JSON
+    (artifacts/bench/fleet_health[_quick].json, written by bench_health
+    via repro.obs.report). Every section's SLO rows are printed; any row
+    whose rolling burn-rate status is "breach" fails the gate. The bench
+    uses generous wall-latency ceilings plus virtual-clock staleness /
+    straggling objectives, so a breach means behavior, not machine
+    speed. Quick artifact preferred; missing artifact skips with a note
+    (same contract as the population/mesh gates)."""
+    failures = []
+    path = next((p for p in (bench_dir / "fleet_health_quick.json",
+                             bench_dir / "fleet_health.json")
+                 if p.exists()), None)
+    if path is None:
+        print("  slo: no fleet health artifact — skipped "
+              "(run bench_health)")
+        return failures
+    data = json.loads(path.read_text())
+    for section in data.get("sections", []):
+        for row in section.get("slo", []):
+            status = row.get("status", "no_data")
+            mark = "FAIL" if status == "breach" else "ok"
+            print(f"  slo {row['name']:18s} value={row.get('value')} "
+                  f"threshold={row.get('threshold')} burn="
+                  f"{row.get('burn_rate')} {status} {mark} [{path.name}]")
+            if status == "breach":
+                failures.append(
+                    f"slo: {row['name']} breached in "
+                    f"'{section.get('label', '?')}' — value "
+                    f"{row.get('value')} vs threshold "
+                    f"{row.get('threshold')} (burn rate "
+                    f"{row.get('burn_rate')})")
+    return failures
+
+
 def sync_relative_ttt(modes: dict) -> dict:
     """policy -> time_to_target / sync's time_to_target (None when either
     side never reached the target accuracy)."""
@@ -191,6 +226,7 @@ def main(argv=None) -> int:
                             f"{args.tolerance:.0%} tolerance)")
     failures += check_population(args.current.parent)
     failures += check_mesh(args.current.parent)
+    failures += check_slo(args.current.parent)
     if failures:
         print("\nbench regression gate FAILED:", file=sys.stderr)
         for f in failures:

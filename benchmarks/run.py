@@ -19,6 +19,9 @@ artifacts/bench/. Budget knobs keep the default full run CPU-tractable;
   (ours)      bench_obs         traced sim/service run -> Perfetto trace
                                 (Chrome trace-event schema smoke) + tracer
                                 overhead
+  (ours)      bench_health      fleet health analytics: straggler phase
+                                attribution + drift under churn, service
+                                SLO burn rates -> fleet_health.{md,json}
 """
 from __future__ import annotations
 
@@ -34,15 +37,22 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: rl,accuracy,cross_size,latency,comm,"
                          "serve,population,mesh,scalability,ablation,"
-                         "roofline,kernels,obs")
+                         "roofline,kernels,obs,health")
     ap.add_argument("--datasets", default="mnist",
                     help="comma list for accuracy bench")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record a dual-clock span trace across the "
                          "selected benches and write Chrome trace-event "
                          "JSON (open at https://ui.perfetto.dev)")
+    ap.add_argument("--health-report", default=None, metavar="OUT.md",
+                    help="run the fleet health bench (even when absent "
+                         "from --only) and write its report to OUT.md "
+                         "(+ .json sibling) instead of artifacts/bench/"
+                         "fleet_health[_quick].md")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.health_report and only is not None:
+        only.add("health")         # --health-report implies the bench
     q = args.quick
 
     tracer = None
@@ -153,6 +163,19 @@ def main() -> None:
     if want("obs"):
         from benchmarks import bench_obs
         run("obs", lambda: bench_obs.main(quick=q))
+    if want("health"):
+        from benchmarks import bench_health
+        # quick mode writes fleet_health_quick.{md,json}: the committed
+        # artifacts/bench/fleet_health.{md,json} is the full-budget
+        # fleet health report and must not be clobbered by a smoke run
+        run("health", lambda: bench_health.main(
+            waves=10 if q else 30,
+            n_clients=16 if q else 24,
+            n_events=150 if q else 600,
+            service_clients=16 if q else 32,
+            k_per_round=4 if q else 8,
+            artifact_name="fleet_health_quick" if q else "fleet_health",
+            out_md=args.health_report))
 
     if tracer is not None:
         tracer.export(args.trace)

@@ -227,6 +227,29 @@ class ClientStore:
             [self._size_index.get(s, -1) for s in sizes], np.int16)
         self.n_planned[c] += 1
 
+    def health_counters(self) -> Dict[str, float]:
+        """Fleet-wide aggregates of the per-client outcome counters (one
+        numpy reduction per field, no per-client Python loop) — the
+        ClientStore side of the `repro.obs.health.FleetHealth` churn
+        view. `update_rate`/`expiry_rate` are fractions of planned
+        slots; `participants` counts clients planned at least once."""
+        planned = int(self.n_planned.sum())
+        return {
+            "n_clients": int(self.n_clients),
+            "inflight": int(self.inflight.sum()),
+            "churned": int(self.churned.sum()),
+            "participants": int((self.n_planned > 0).sum()),
+            "planned_total": planned,
+            "updates_total": int(self.n_updates.sum()),
+            "expired_total": int(self.n_expired.sum()),
+            "update_rate": round(
+                float(self.n_updates.sum()) / max(planned, 1), 4),
+            "expiry_rate": round(
+                float(self.n_expired.sum()) / max(planned, 1), 4),
+            "max_expired_one_client": int(self.n_expired.max())
+            if self.n_clients else 0,
+        }
+
     def nbytes(self) -> int:
         """Total bytes across the dense arrays + sparse EF residuals."""
         total = sum(

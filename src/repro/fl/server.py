@@ -170,6 +170,10 @@ class HAPFLServer:
         self.history: List[RoundRecord] = []
         self._round = 0
         self._last_rl_diag: Optional[Dict[str, Dict]] = None
+        # set by a scheduler/service with a FleetHealth attached: collect
+        # per-wave PPO diagnostics even when tracing is off (the trace
+        # counter emits stay no-ops; only RoundRecord.rl_diag fills in)
+        self.collect_rl_diag = False
 
     # ------------------------------------------------------------------ #
     def _client_train(self, client: int, size: str, intensity: int):
@@ -425,9 +429,10 @@ class HAPFLServer:
         return len(updates)
 
     def feedback_wave(self, plan: WavePlan):
-        """Step 6: RL rewards (Algorithm 1 lines 22-30). With tracing on,
-        also collects both agents' PPO diagnostics (repro.obs.rl), emits
-        them as trace counters, and stages them for `record_wave`."""
+        """Step 6: RL rewards (Algorithm 1 lines 22-30). With tracing on
+        (or `collect_rl_diag` set by a health-tracking caller), also
+        collects both agents' PPO diagnostics (repro.obs.rl), emits them
+        as trace counters, and stages them for `record_wave`."""
         tr = _tracer()
         with tr.span("server.feedback_wave", round=plan.round_idx):
             rw1 = (self.allocator.feedback(self._pad(plan.local_times),
@@ -435,7 +440,8 @@ class HAPFLServer:
                    if self.use_ppo1 else 0.0)
             rw2 = (self.intensity.feedback(self._pad(plan.local_times))
                    if self.use_ppo2 else 0.0)
-        if tr.enabled and (self.use_ppo1 or self.use_ppo2):
+        if ((tr.enabled or self.collect_rl_diag)
+                and (self.use_ppo1 or self.use_ppo2)):
             from repro.obs.rl import wave_diagnostics
             diag = wave_diagnostics(self)
             for agent_name, d in diag.items():

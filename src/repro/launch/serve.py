@@ -23,7 +23,8 @@ from repro.service import (LoadGenerator, ParamService, latest_checkpoint,
 def build_service(n_clients: int, k_per_round: int, policy: str,
                   codec: str, seed: int, min_deadline: float,
                   checkpoint_dir=None, checkpoint_every=None,
-                  churn: bool = True, horizon: float = 100.0):
+                  churn: bool = True, horizon: float = 100.0,
+                  health=None, slos=None):
     cfg = FLSimConfig(dataset="mnist", n_clients=n_clients,
                       k_per_round=k_per_round, n_train=16 * n_clients,
                       n_test=128, batches_per_epoch=1, default_epochs=8,
@@ -39,7 +40,8 @@ def build_service(n_clients: int, k_per_round: int, policy: str,
                         max_inflight=k_per_round,
                         min_deadline=min_deadline,
                         checkpoint_dir=checkpoint_dir,
-                        checkpoint_every=checkpoint_every)
+                        checkpoint_every=checkpoint_every,
+                        health=health, slos=slos)
 
 
 def main():
@@ -66,12 +68,27 @@ def main():
                     help="record a dual-clock span trace of the run and "
                          "write Chrome trace-event JSON (open it at "
                          "https://ui.perfetto.dev)")
+    ap.add_argument("--health-report", default=None, metavar="OUT.md",
+                    help="attach a FleetHealth tracker + the default "
+                         "service SLOs and write the fleet health report "
+                         "(markdown + .json sibling) when the trace ends")
+    ap.add_argument("--prom-out", default=None, metavar="OUT.prom",
+                    help="write a Prometheus text-exposition snapshot of "
+                         "the service metrics registry when the trace ends")
+    ap.add_argument("--events-jsonl", default=None, metavar="OUT.jsonl",
+                    help="tee the structured event log into an append-only "
+                         "JSONL stream with rotation")
     args = ap.parse_args()
 
     tracer = None
     if args.trace:
         from repro.obs import trace as obs_trace
         tracer = obs_trace.enable()
+
+    slos = None
+    if args.health_report:
+        from repro.obs.slo import default_service_slos
+        slos = default_service_slos()
 
     horizon = args.events / args.rate_hz
     svc = build_service(
@@ -80,7 +97,14 @@ def main():
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=(args.checkpoint_every
                           if args.checkpoint_dir else None),
-        churn=not args.no_churn, horizon=horizon)
+        churn=not args.no_churn, horizon=horizon,
+        health=bool(args.health_report) or None, slos=slos)
+
+    jsonl = None
+    if args.events_jsonl:
+        from repro.obs.export import JsonlEventLog
+        jsonl = JsonlEventLog(args.events_jsonl)
+        svc.metrics.attach_jsonl(jsonl)
 
     resume = (latest_checkpoint(args.checkpoint_dir)
               if args.checkpoint_dir else None)
@@ -108,6 +132,26 @@ def main():
                             for k, v in svc.evaluate().items()})
     svc.metrics.dump(args.metrics_out)
     print(f"metrics + event log -> {args.metrics_out}")
+    if args.health_report:
+        from repro.obs.report import write_health_report
+        md_path, json_path = write_health_report(
+            args.health_report,
+            [{"label": f"service run ({args.policy}, codec={args.codec}, "
+                       f"{args.events} events)",
+              "health": svc.health, "slo": svc.slos, "store": svc.store,
+              "meta": {"n_clients": args.n_clients,
+                       "k_per_round": args.k_per_round,
+                       "policy": args.policy, "codec": args.codec,
+                       "events": args.events, "seed": args.seed}}])
+        print(f"fleet health report -> {md_path} (+ {json_path})")
+    if args.prom_out:
+        from repro.obs.export import write_prometheus
+        print(f"prometheus exposition -> "
+              f"{write_prometheus(svc.metrics.registry, args.prom_out)}")
+    if jsonl is not None:
+        jsonl.close()
+        print(f"event stream ({jsonl.n_written} events, "
+              f"{jsonl.n_rotations} rotations) -> {jsonl.path}")
     if tracer is not None:
         tracer.export(args.trace)
         print(f"trace ({len(tracer.events)} events) -> {args.trace} "

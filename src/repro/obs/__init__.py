@@ -1,10 +1,20 @@
 """Unified telemetry subsystem (DESIGN.md §16): dual-clock span tracing
 with Perfetto export (`repro.obs.trace`), the general metrics registry
-`ServiceMetrics` is built on (`repro.obs.registry`), and per-wave PPO
-diagnostics (`repro.obs.rl`)."""
+`ServiceMetrics` is built on (`repro.obs.registry`), per-wave PPO
+diagnostics (`repro.obs.rl`), fleet health analytics — straggler phase
+attribution, EWMA drift, churn (`repro.obs.health`) — declarative SLOs
+with burn-rate status (`repro.obs.slo`), Prometheus text exposition +
+JSONL event streams (`repro.obs.export`), and the markdown/JSON fleet
+health report (`repro.obs.report`)."""
+from repro.obs.export import (JsonlEventLog, parse_prometheus_text,
+                              prometheus_text, write_prometheus)
+from repro.obs.health import FleetHealth
 from repro.obs.registry import (Counter, CounterVec, Gauge, Histogram,
                                 IntHistogram, MetricsRegistry, Reservoir,
                                 latency_stats)
+from repro.obs.report import fleet_health_report, write_health_report
+from repro.obs.slo import (SLO, SLOSet, default_service_slos,
+                           default_sim_slos)
 from repro.obs.trace import (NULL_TRACER, VIRTUAL, WALL, NullTracer, Tracer,
                              current, disable, enable, validate_chrome_trace,
                              wave_timing_summary)
@@ -15,4 +25,8 @@ __all__ = [
     "NULL_TRACER", "VIRTUAL", "WALL", "NullTracer", "Tracer",
     "current", "disable", "enable", "validate_chrome_trace",
     "wave_timing_summary",
+    "FleetHealth", "SLO", "SLOSet", "default_service_slos",
+    "default_sim_slos", "JsonlEventLog", "prometheus_text",
+    "parse_prometheus_text", "write_prometheus", "fleet_health_report",
+    "write_health_report",
 ]

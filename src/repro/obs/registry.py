@@ -23,6 +23,7 @@ always applied to its wall reservoirs).
 """
 from __future__ import annotations
 
+import math
 from collections import Counter as _PyCounter
 from collections import deque
 from typing import Dict, List, Optional, Sequence
@@ -127,6 +128,22 @@ class IntHistogram(Instrument):
     def observe(self, value: int, n: int = 1) -> None:
         self.counts[int(value)] += n
 
+    def quantile(self, q: float) -> Optional[float]:
+        """Exact q-quantile (q in [0, 1]) of the observed integers: the
+        smallest value whose cumulative count reaches q * total — i.e.
+        `numpy.percentile(..., method="inverted_cdf")`, which the
+        property tests pin. None when empty."""
+        total = sum(self.counts.values())
+        if total == 0:
+            return None
+        target = q * total
+        cum = 0
+        for k in sorted(self.counts):
+            cum += self.counts[k]
+            if cum >= target - 1e-9:
+                return float(k)
+        return float(max(self.counts))
+
     def pack(self):
         return {str(k): int(self.counts[k]) for k in sorted(self.counts)}
 
@@ -151,11 +168,44 @@ class Histogram(Instrument):
         self.buckets = [0] * (len(self.edges) + 1)
         self.sum = 0.0
         self.count = 0
+        # observed range: tightens the open-ended first/overflow buckets
+        # in quantile(); process-local refinement, not part of pack()
+        # (the checkpoint schema predates it and loses nothing material)
+        self.min = math.inf
+        self.max = -math.inf
 
     def observe(self, x: float, n: int = 1) -> None:
         self.buckets[int(np.searchsorted(self.edges, x, side="right"))] += n
         self.sum += float(x) * n
         self.count += n
+        x = float(x)
+        self.min = min(self.min, x)
+        self.max = max(self.max, x)
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Approximate q-quantile (q in [0, 1]) by linear interpolation
+        within the bucket holding the q*count-th observation — the
+        standard `histogram_quantile` estimate, so the error is bounded
+        by that bucket's width (the property tests pin this against
+        `numpy.percentile`). Bucket bounds are clamped to the observed
+        min/max where known. None when empty."""
+        if self.count == 0:
+            return None
+        lo0 = self.min if math.isfinite(self.min) else self.edges[0]
+        hi_last = self.max if math.isfinite(self.max) else self.edges[-1]
+        bounds = ([(min(lo0, self.edges[0]), self.edges[0])]
+                  + list(zip(self.edges[:-1], self.edges[1:]))
+                  + [(self.edges[-1], max(hi_last, self.edges[-1]))])
+        target = q * self.count
+        cum = 0
+        for b, (lo, hi) in zip(self.buckets, bounds):
+            if b > 0 and cum + b >= target - 1e-9:
+                lo = max(lo, lo0)
+                hi = max(min(hi, hi_last), lo)
+                frac = min(max((target - cum) / b, 0.0), 1.0)
+                return float(lo + frac * (hi - lo))
+            cum += b
+        return float(hi_last)
 
     def pack(self):
         return {"edges": list(self.edges), "buckets": list(self.buckets),
@@ -168,11 +218,15 @@ class Histogram(Instrument):
         self.buckets = [int(b) for b in state["buckets"]]
         self.sum = float(state["sum"])
         self.count = int(state["count"])
+        self.min = math.inf
+        self.max = -math.inf
 
     def reset(self) -> None:
         self.buckets = [0] * (len(self.edges) + 1)
         self.sum = 0.0
         self.count = 0
+        self.min = math.inf
+        self.max = -math.inf
 
 
 class Reservoir(Instrument):

@@ -36,6 +36,7 @@ what the ``--only obs`` bench smoke asserts.
 from __future__ import annotations
 
 import json
+import math
 import time
 from pathlib import Path
 from typing import Dict, List, Optional
@@ -300,15 +301,22 @@ REQUIRED_KEYS = ("name", "ph", "pid", "tid", "ts")
 def validate_chrome_trace(trace: Dict) -> Dict:
     """Assert the Chrome trace-event invariants the exporter guarantees:
     a `traceEvents` list, required keys on every event, non-negative
-    durations on "X" events, and non-decreasing `ts` within each
-    (pid, tid) track. Returns summary stats; raises ValueError on any
-    violation (the ``--only obs`` bench smoke calls this)."""
+    durations on "X" events, non-decreasing `ts` within each (pid, tid)
+    track, and well-formed counters — every "C" sample must carry a
+    non-empty numeric args dict with *finite* values (NaN/inf silently
+    break Perfetto's counter rendering), non-decreasing in `ts` per
+    (pid, name) counter track (counters with the same name form one
+    Perfetto track regardless of tid, so a merged trace can violate this
+    while every (pid, tid) track stays monotone). Returns summary stats;
+    raises ValueError on any violation (the ``--only obs`` bench smoke
+    calls this)."""
     if not isinstance(trace, dict) or "traceEvents" not in trace:
         raise ValueError("trace must be a dict with a 'traceEvents' list")
     events = trace["traceEvents"]
     if not isinstance(events, list) or not events:
         raise ValueError("traceEvents must be a non-empty list")
     last_ts: Dict = {}
+    last_counter_ts: Dict = {}
     stats = {"n_events": 0, "n_spans": 0, "n_counters": 0, "n_instants": 0,
              "tracks": set(), "pids": set()}
     for i, ev in enumerate(events):
@@ -327,6 +335,24 @@ def validate_chrome_trace(trace: Dict) -> Dict:
                 raise ValueError(f"X event {i} has negative/missing dur")
             stats["n_spans"] += 1
         elif ev["ph"] == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                raise ValueError(f"counter event {i} ({ev['name']!r}) has "
+                                 f"no args series")
+            for series, v in args.items():
+                if (isinstance(v, bool)
+                        or not isinstance(v, (int, float))
+                        or not math.isfinite(v)):
+                    raise ValueError(
+                        f"counter event {i} ({ev['name']!r}) series "
+                        f"{series!r} has non-finite value {v!r}")
+            ctrack = (ev["pid"], ev["name"])
+            if ev["ts"] < last_counter_ts.get(ctrack, float("-inf")):
+                raise ValueError(
+                    f"counter event {i} breaks ts monotonicity on counter "
+                    f"track {ctrack}: {ev['ts']} < "
+                    f"{last_counter_ts[ctrack]}")
+            last_counter_ts[ctrack] = ev["ts"]
             stats["n_counters"] += 1
         elif ev["ph"] == "i":
             stats["n_instants"] += 1

@@ -76,6 +76,7 @@ class ServiceMetrics:
         self._submit = r.reservoir("service.submit_s", reservoir_size)
         self._checkpoint = r.reservoir("service.checkpoint_s", reservoir_size)
         self.events: deque = deque(maxlen=event_log_size)
+        self._jsonl = None
         self.reset_window()
 
     # legacy attribute surface over the registry instruments ----------- #
@@ -128,8 +129,24 @@ class ServiceMetrics:
         self._staleness.observe(int(tau))
 
     def log(self, now: float, kind: str, **fields) -> None:
-        self.events.append({"t": round(float(now), 6), "event": kind,
-                            **fields})
+        ev = {"t": round(float(now), 6), "event": kind, **fields}
+        self.events.append(ev)
+        if self._jsonl is not None:
+            self._jsonl.write(_jsonable(ev))
+
+    def attach_jsonl(self, sink) -> None:
+        """Tee every `log()` event into a `repro.obs.export.JsonlEventLog`
+        (or anything with a `write(dict)`), in addition to the bounded
+        in-memory deque. Pass None to detach."""
+        self._jsonl = sink
+
+    def prometheus(self, namespace: str = "hapfl",
+                   const_labels: Optional[Dict[str, str]] = None) -> str:
+        """This registry in the Prometheus text exposition format
+        (repro.obs.export.prometheus_text) — the scrape surface."""
+        from repro.obs.export import prometheus_text
+        return prometheus_text(self.registry, namespace=namespace,
+                               const_labels=const_labels)
 
     def reset_window(self) -> None:
         """Restart the rate window: clears the latency reservoirs and the

@@ -101,7 +101,8 @@ class ParamService:
                  deadline_factor: float = 3.0, min_deadline: float = 0.0,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: Optional[int] = None,
-                 event_log_size: int = 2000):
+                 event_log_size: int = 2000, health=None, slos=None,
+                 slo_every: float = 5.0):
         from repro.service.metrics import ServiceMetrics
         if isinstance(policy, str):
             policy = make_policy(policy)
@@ -133,6 +134,25 @@ class ParamService:
         # source of truth for reference pytrees (bounded by max_inflight —
         # only the active cohort materializes trees)
         self.store = getattr(server, "store", None)
+        # fleet health + SLOs (repro.obs.health / repro.obs.slo): both
+        # observational — a service without them is byte-identical to one
+        # never offered them. health=True builds a default tracker; slos
+        # may be an SLOSet or a list of SLO declarations, evaluated in
+        # poll() every `slo_every` caller-clock seconds and surfaced as
+        # slo.<name>.{value,burn_rate,ok} gauges + transition events.
+        if health is True:
+            from repro.obs.health import FleetHealth
+            health = FleetHealth(server.env.cfg.n_clients)
+        self.health = health
+        if health is not None and hasattr(server, "collect_rl_diag"):
+            server.collect_rl_diag = True
+        if slos is not None and not hasattr(slos, "evaluate"):
+            from repro.obs.slo import SLOSet
+            slos = SLOSet(slos)
+        self.slos = slos
+        self.slo_every = float(slo_every)
+        self._slo_next = -np.inf               # evaluate on the first poll
+        self._slo_status: Dict[str, str] = {}
 
     # ------------------------------------------------------------------ #
     # dispatch path
@@ -167,6 +187,8 @@ class ParamService:
                 if self._churn_rejoined(c):
                     self.metrics.bump("rejoin")
                     self.metrics.log(now, "rejoin", client=c)
+                    if self.health is not None:
+                        self.health.note_outcome("rejoin")
                 continue
             self.metrics.bump(f"reject_dispatch_{reason}")
             self.metrics.log(now, "reject_dispatch", client=c, reason=reason)
@@ -212,6 +234,8 @@ class ParamService:
                 self.store.open_slots(admitted, w, list(range(m)),
                                       self.version,
                                       [tk.deadline for tk in tickets])
+            if self.health is not None:
+                self.health.note_outcome("dispatched", m)
         self.metrics.dispatch_s.append(time.perf_counter() - t0)
         return tickets
 
@@ -246,6 +270,8 @@ class ParamService:
             return SubmitReceipt(False, "no_ticket", version=self.version)
         if self.store is not None:
             self.store.close_slot(client, "update")
+        if self.health is not None:
+            self.health.note_outcome("update")
         decoded, wire = self._ingest_decode(tk, params)
         tau = max(self.version - tk.version, 0)
         self.metrics.up_bytes += wire
@@ -354,8 +380,33 @@ class ParamService:
             self.metrics.bump("expired")
             self.metrics.log(now, "expire", client=tk.client, wave=tk.wave,
                              deadline=round(tk.deadline, 6))
+            if self.health is not None:
+                self.health.note_outcome("expired")
             self._resolve(tk, now, expired=True)
+        if self.slos is not None and now >= self._slo_next:
+            self._slo_next = float(now) + self.slo_every
+            self._check_slos(now)
         return len(expired)
+
+    def _check_slos(self, now: float) -> None:
+        """Evaluate the SLO set against the live registry; surface each
+        as gauges (the Prometheus exposition picks them up) and log a
+        structured event whenever an SLO's status transitions."""
+        r = self.metrics.registry
+        for row in self.slos.evaluate(registry=r):
+            name = row["name"]
+            r.gauge(f"slo.{name}.burn_rate").set(row["burn_rate"])
+            r.gauge(f"slo.{name}.ok").set(
+                1.0 if row["status"] in ("ok", "no_data") else 0.0)
+            if row["value"] is not None:
+                r.gauge(f"slo.{name}.value").set(row["value"])
+            prev = self._slo_status.get(name)
+            if row["status"] != prev:
+                self._slo_status[name] = row["status"]
+                self.metrics.bump(f"slo_{row['status']}")
+                self.metrics.log(now, "slo", name=name,
+                                 status=row["status"], value=row["value"],
+                                 burn_rate=row["burn_rate"])
 
     def _note_expired(self, client: int) -> None:
         if self.store is not None:
@@ -389,13 +440,19 @@ class ParamService:
         if info is None:
             return
         info["outstanding"].discard(tk.index)
+        if self.health is not None:
+            info.setdefault("resolved", []).append((tk.index, float(now)))
         if info["outstanding"]:
             return
         plan = info["plan"]
         del self._waves[tk.wave]
         rw1, rw2 = self.server.feedback_wave(plan)
-        self.server.record_wave(plan, rw1, rw2, eval_accuracy=False,
-                                wall_time=now - plan.t_dispatch)
+        rec = self.server.record_wave(plan, rw1, rw2, eval_accuracy=False,
+                                      wall_time=now - plan.t_dispatch)
+        if self.health is not None:
+            self._note_health_wave(tk.wave, plan, info.get("resolved", ()),
+                                   now)
+            self.health.note_rl(tk.wave, rec.rl_diag)
         self.metrics.bump("wave_done")
         self.metrics.log(now, "wave_done", wave=tk.wave,
                          reward_ppo1=round(float(rw1), 4),
@@ -406,6 +463,35 @@ class ParamService:
                        max(float(now), plan.t_dispatch), clock=VIRTUAL,
                        tid=f"wave{tk.wave}", wave=tk.wave,
                        n=len(plan.clients), expired=int(expired))
+
+    def _note_health_wave(self, wave: int, plan, resolved, now: float,
+                          ) -> None:
+        """Feed one fully resolved wave into FleetHealth. The service
+        measures true per-slot turnarounds (resolution time - dispatch);
+        the plan's *predicted* assess/local seconds are scaled into each
+        turnaround (a slot cannot have spent more than it took) and the
+        unexplained remainder is attributed to comm — transport plus
+        deadline slack, exactly the share the simulator charges to
+        links."""
+        res = sorted(resolved)
+        if not res:
+            return
+        idx = [i for i, _ in res]
+        t = np.asarray([tt for _, tt in res], dtype=np.float64)
+        own = np.maximum(t - plan.t_dispatch, 0.0)
+        a = np.asarray([plan.assess[i] for i in idx], dtype=np.float64)
+        lo = np.asarray([plan.local_times[i] for i in idx],
+                        dtype=np.float64)
+        pred = a + lo
+        scale = np.where(pred > 0,
+                         np.minimum(own / np.maximum(pred, 1e-12), 1.0),
+                         0.0)
+        a, lo = a * scale, lo * scale
+        comm = np.maximum(own - a - lo, 0.0)
+        self.health.note_wave(wave, plan.t_dispatch, float(now),
+                              [plan.clients[i] for i in idx],
+                              [plan.sizes[i] for i in idx],
+                              a, lo, comm, own=own)
 
     # ------------------------------------------------------------------ #
     # inspection

@@ -72,6 +72,10 @@ class SimResult:
     #: mean/max/total over waves) from the trace's wave-barrier spans —
     #: populated only when tracing was enabled for the run, None otherwise
     timing: Optional[Dict] = None
+    #: FleetHealth.summary() — straggler phase attribution, EWMA drift,
+    #: per-size-group percentiles, churn (repro.obs.health); populated
+    #: only when a FleetHealth was attached to the run, None otherwise
+    health: Optional[Dict] = None
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -104,7 +108,7 @@ class EventScheduler:
                  availability: Optional[AvailabilityModel] = None,
                  latency_only: bool = False, eval_accuracy: bool = True,
                  eval_every: int = 1, deterministic: bool = False,
-                 participation: str = "full"):
+                 participation: str = "full", health=None):
         if participation not in ("full", "sampled"):
             raise ValueError(f"unknown participation {participation!r}")
         self.server = server
@@ -153,6 +157,18 @@ class EventScheduler:
         # scheduler's own, not any other run's) feed SimResult.timing
         self._tr = _tracer()
         self._wave_spans: List[Dict] = []
+        # fleet health analytics (repro.obs.health): health=True builds a
+        # default tracker; like tracing, attaching one is observational —
+        # health=None runs stay byte-identical to uninstrumented ones
+        # (pinned in tests/test_obs.py). With health on, the server also
+        # collects per-wave RL diagnostics even untraced, so the report
+        # gets policy trends without paying for a full trace.
+        if health is True:
+            from repro.obs.health import FleetHealth
+            health = FleetHealth(self.env.cfg.n_clients)
+        self.health = health
+        if health is not None and hasattr(server, "collect_rl_diag"):
+            server.collect_rl_diag = True
 
     # ------------------------------------------------------------------ #
     def _available(self, client: int) -> bool:
@@ -220,22 +236,27 @@ class EventScheduler:
         # self.t — `(t + off) - t` would drift a ulp and break parity.
         # One vectorized pass replaces the per-client arithmetic; the
         # operation order matches the old scalar loop exactly.
-        offs = downs + np.asarray(plan.assess) + np.asarray(plan.local_times) \
-            + ups
-        t_assess = self.t + downs + np.asarray(plan.assess)
+        a = np.asarray(plan.assess)
+        lt = np.asarray(plan.local_times)
+        offs = downs + a + lt + ups
+        t_assess = self.t + downs + a
         t_arrive = self.t + offs
         if self._tr.enabled:
             # critical-path phase boundaries (cumulative maxima over the
             # cohort): the wave cannot close before the slowest client
             # clears each stage — _finish_wave turns these into nested
             # virtual-clock spans and the assess/local/comm breakdown
-            a = np.asarray(plan.assess)
-            lt = np.asarray(plan.local_times)
             info["phases"] = (float(np.max(downs)), float(np.max(downs + a)),
                               float(np.max(downs + a + lt)),
                               float(np.max(offs)))
             self._tr.instant("dispatch", clock=VIRTUAL, tid="events",
                              wave=w, n=m)
+        if self.health is not None:
+            # per-client phase offsets for note_wave at resolution (the
+            # exact values the events are scheduled from, not estimates)
+            info["health"] = (list(clients), list(plan.sizes), a, lt,
+                              downs + ups, offs)
+            self.health.note_outcome("dispatched", m)
         evs = []
         for i, c in enumerate(clients):
             self.inflight[c] = (w, i)
@@ -354,6 +375,12 @@ class EventScheduler:
             wall_time=wall)
         if self._tr.enabled and "phases" in info:
             self._emit_wave_spans(w, plan, info)
+        if self.health is not None and "health" in info:
+            clients, sizes, a, lt, comm, offs = info["health"]
+            self.health.note_wave(w, plan.t_dispatch,
+                                  plan.t_dispatch + wall, clients, sizes,
+                                  a, lt, comm, own=offs)
+            self.health.note_rl(w, rec.rl_diag)
         if (aggregate and self.records and self.eval_accuracy
                 and not self.latency_only):
             if sync:
@@ -401,6 +428,8 @@ class EventScheduler:
         info["outstanding"].discard(i)
         info["arrived"].append((i, ev.time))
         self.n_updates += 1
+        if self.health is not None:
+            self.health.note_outcome("update")
         if self.comm:
             self.up_bytes += self.comm.payload_bytes(
                 info["plan"].sizes[i], direction="up")
@@ -427,6 +456,8 @@ class EventScheduler:
                 if self.store is not None:
                     self.store.close_slot(c, "expired")
             self.n_dropped += 1
+            if self.health is not None:
+                self.health.note_outcome("expired")
         info["outstanding"].clear()
         self._finish_wave(ev.wave, aggregate=True)
 
@@ -439,6 +470,8 @@ class EventScheduler:
         info = self._waves[w]
         info["outstanding"].discard(i)
         self.n_dropped += 1
+        if self.health is not None:
+            self.health.note_outcome("dropped")
         if self.availability is not None:
             self.queue.push(Event(
                 self.availability.next_online(ev.client, ev.time), REJOIN,
@@ -450,6 +483,8 @@ class EventScheduler:
             self._try_dispatch()
 
     def _on_rejoin(self, ev: Event) -> None:
+        if self.health is not None and ev.client >= 0:
+            self.health.note_outcome("rejoin")
         self._try_dispatch()
 
     def _on_assess_done(self, ev: Event) -> None:
@@ -522,4 +557,6 @@ class EventScheduler:
             up_bytes=self.up_bytes, down_bytes=self.down_bytes,
             acc_curve=list(self.acc_curve), records=list(self.records),
             timing=(wave_timing_summary(self._wave_spans)
-                    if self._tr.enabled else None))
+                    if self._tr.enabled else None),
+            health=(self.health.summary(store=self.store)
+                    if self.health is not None else None))

@@ -1,0 +1,394 @@
+"""Fleet health analytics (DESIGN.md §16): FleetHealth attribution /
+drift / churn, declarative SLOs + burn rates, Prometheus exposition
+round trip, JSONL event rotation, the report generator, and the
+scheduler/service integration paths."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.population import ClientStore
+from repro.fl import FLEnvironment, FLSimConfig, HAPFLServer
+from repro.obs.export import (JsonlEventLog, parse_prometheus_text,
+                              prometheus_text, write_prometheus)
+from repro.obs.health import PHASES, FleetHealth
+from repro.obs.registry import MetricsRegistry
+from repro.obs.slo import (SLO, SLOSet, default_service_slos,
+                           default_sim_slos)
+from repro.obs.report import fleet_health_report, write_health_report
+from repro.sim import BufferedPolicy, EventScheduler
+
+CFG = FLSimConfig(dataset="mnist", n_train=300, n_test=80, n_clients=8,
+                  k_per_round=4, batches_per_epoch=1, default_epochs=2,
+                  batch_size=16)
+
+
+# --------------------------------------------------------------------- #
+# FleetHealth core
+# --------------------------------------------------------------------- #
+def test_note_wave_attributes_straggler_to_dominant_phase():
+    h = FleetHealth(4)
+    row = h.note_wave(0, t0=10.0, t1=22.0, clients=[0, 1, 2],
+                      sizes=["small", "large", "small"],
+                      assess=[0.5, 1.0, 0.2],
+                      local=[2.0, 3.0, 1.0],
+                      comm=[0.5, 6.0, 0.3])
+    # client 1 is slowest (1+3+6=10) and comm-bound
+    assert row["straggler"] == 1 and row["size"] == "large"
+    assert row["dominant_phase"] == "comm"
+    assert row["turnaround_s"] == 10.0 and row["span_s"] == 12.0
+    # barrier = span - own turnaround, clipped at 0
+    assert row["phases_s"]["barrier"] == 2.0
+    assert h.straggler_waves[1] == 1 and h.straggler_waves[0] == 0
+    assert list(h.waves_seen[:3]) == [1, 1, 1] and h.waves_seen[3] == 0
+    att = h.phase_attribution()
+    assert att["straggler_dominant_waves"]["comm"] == 1
+    assert abs(sum(att["share"].values()) - 1.0) < 1e-6
+
+
+def test_explicit_own_turnaround_overrides_phase_sum():
+    h = FleetHealth(2)
+    row = h.note_wave(0, 0.0, 5.0, [0], ["s"], assess=[1.0], local=[1.0],
+                      comm=[0.0], own=[5.0])
+    assert row["turnaround_s"] == 5.0
+    assert row["phases_s"]["barrier"] == 0.0      # span == own
+
+
+def test_ewma_drift_flags_slow_anomaly_after_history():
+    h = FleetHealth(1, ewma_alpha=0.25, z_thresh=3.0, min_history=3)
+    for w in range(6):                 # stable baseline with tiny wiggle
+        h.note_wave(w, 0.0, 10.0, [0], ["s"], [0.1], [9.0 + 0.01 * (w % 2)],
+                    [0.1])
+    assert h.slow_anomalies[0] == 0
+    row = h.note_wave(6, 0.0, 100.0, [0], ["s"], [0.1], [90.0], [0.1])
+    assert row["z"] > 3.0
+    assert h.slow_anomalies[0] == 1 and h.fast_anomalies[0] == 0
+    drift = h.drift_summary()
+    assert drift["clients_flagged_slow"] == 1
+    assert drift["top_drifting"][0]["client"] == 0
+
+
+def test_drift_needs_min_history_and_variance():
+    h = FleetHealth(1, min_history=3)
+    # an early spike (history < min_history) must not flag
+    h.note_wave(0, 0.0, 1.0, [0], ["s"], [0.0], [1.0], [0.0])
+    row = h.note_wave(1, 0.0, 99.0, [0], ["s"], [0.0], [99.0], [0.0])
+    assert row["z"] == 0.0 and h.slow_anomalies[0] == 0
+
+
+def test_group_stats_match_numpy_percentiles():
+    h = FleetHealth(6)
+    local = [1.0, 5.0, 2.0, 8.0, 3.0, 4.0]
+    h.note_wave(0, 0.0, 10.0, list(range(6)), ["a", "a", "a", "b", "b", "b"],
+                [0.0] * 6, local, [0.0] * 6)
+    g = h.group_stats()
+    a = np.array(local[:3])
+    assert g["a"]["n"] == 3
+    assert g["a"]["p50_s"] == round(float(np.percentile(a, 50)), 6)
+    assert g["a"]["p99_s"] == round(float(np.percentile(a, 99)), 6)
+    assert g["b"]["max_s"] == 8.0
+
+
+def test_churn_summary_merges_store_counters():
+    store = ClientStore.synthetic(8, 10.0, seed=0, size_names=("s", "l"))
+    store.open_slots([1, 2], wave=0, indices=[0, 1], version=0)
+    store.note_plan([1, 2], [0.1, 0.2], [1.0, 2.0], ["s", "l"], [5, 5])
+    store.close_slot(1, "update")
+    store.close_slot(2, "expired")
+    h = FleetHealth(8)
+    h.note_outcome("dispatched", 2)
+    h.note_outcome("update")
+    h.note_outcome("expired")
+    h.note_wave(0, 0.0, 2.0, [1, 2], ["s", "l"], [0.1, 0.2], [1.0, 2.0],
+                [0.0, 0.0])
+    out = h.churn_summary(store=store)
+    assert out["outcomes"] == {"dispatched": 2, "expired": 1, "update": 1}
+    s = out["store"]
+    assert s["planned_total"] == 2 and s["updates_total"] == 1
+    assert s["expired_total"] == 1 and s["update_rate"] == 0.5
+    assert s["participants"] == 2
+
+
+def test_summary_is_json_native_and_bounded():
+    h = FleetHealth(4, max_wave_rows=2)
+    for w in range(5):
+        h.note_wave(w, 0.0, 1.0, [w % 4], ["s"], [0.1], [0.5], [0.1])
+        h.note_rl(w, {"ppo1": {"entropy": 0.5, "n_updates": 0.0}})
+    s = h.summary()
+    assert s["n_waves"] == 5 and len(s["waves"]) == 2   # deque bound
+    json.dumps(s)                                        # JSON-native
+    assert s["waves"][-1]["dominant_phase"] in PHASES
+
+
+def test_bad_alpha_rejected():
+    with pytest.raises(ValueError, match="ewma_alpha"):
+        FleetHealth(4, ewma_alpha=0.0)
+
+
+# --------------------------------------------------------------------- #
+# SLOs + burn rate
+# --------------------------------------------------------------------- #
+def test_slo_validation():
+    with pytest.raises(ValueError, match="op"):
+        SLO("x", "m", op="<")
+    with pytest.raises(ValueError, match="objective"):
+        SLO("x", "m", objective=1.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        SLOSet([SLO("x", "m"), SLO("x", "m2")])
+
+
+def test_burn_rate_status_transitions():
+    s = SLOSet([SLO("lat", "g", "value", "<=", 10.0, objective=0.9,
+                    window=10)])
+    r = MetricsRegistry()
+    g = r.gauge("g")
+    g.set(5.0)
+    row = s.evaluate(registry=r)[0]
+    assert row["status"] == "ok" and row["burn_rate"] == 0.0
+    g.set(50.0)                      # 1 breach / 10 / 0.1 = burn 1.0
+    row = s.evaluate(registry=r)[0]
+    assert row["status"] == "warn" and row["burn_rate"] == 1.0
+    row = s.evaluate(registry=r)[0]  # 2 breaches -> burn 2.0
+    assert row["status"] == "breach" and row["burn_rate"] == 2.0
+    assert s.worst_status() == "breach"
+    assert s.report()[0]["breaches"] == 2 and s.report()[0]["checks"] == 3
+
+
+def test_no_data_consumes_no_budget():
+    s = SLOSet([SLO("lat", "service.dispatch_s", "p99", "<=", 1.0)])
+    row = s.evaluate(registry=MetricsRegistry())[0]
+    assert row["status"] == "no_data" and row["value"] is None
+    assert row["burn_rate"] == 0.0 and row["checks"] == 0
+    assert s.worst_status() == "no_data"
+
+
+def test_slo_measures_registry_instruments():
+    r = MetricsRegistry()
+    res = r.reservoir("lat_s")
+    for v in (0.010, 0.020, 0.030):
+        res.observe(v)
+    r.counter_vec("counts").inc("expired", 4)
+    r.int_histogram("stale").observe(2)
+    r.int_histogram("stale").observe(6)
+    rows = SLOSet([
+        SLO("p99", "lat_s", "p99", "<=", 100.0),
+        SLO("exp", "counts", "key:expired", "<=", 3.0),
+        SLO("tau", "stale", "p95", "<=", 8.0),
+    ]).evaluate(registry=r)
+    # reservoir seconds are measured in milliseconds
+    assert rows[0]["value"] == pytest.approx(
+        float(np.percentile([10.0, 20.0, 30.0], 99)))
+    assert rows[1]["value"] == 4.0 and rows[1]["met"] is False
+    assert rows[2]["value"] == 6.0 and rows[2]["met"] is True
+
+
+def test_slo_measures_sim_result():
+    class Rec:
+        def __init__(self, s, n):
+            self.straggling, self.n_updates = s, n
+
+    class Result:
+        records = [Rec(5.0, 2), Rec(100.0, 0), Rec(7.0, 1)]
+        time_to_target = 42.0
+
+    rows = SLOSet([
+        SLO("strag", "records.straggling", "max", "<=", 10.0),
+        SLO("ttt", "result.time_to_target", "value", "<=", 50.0),
+    ]).evaluate(result=Result())
+    # the empty aggregation (n_updates=0) is excluded
+    assert rows[0]["value"] == 7.0 and rows[0]["met"] is True
+    assert rows[1]["value"] == 42.0 and rows[1]["met"] is True
+
+
+def test_default_slo_sets():
+    names = [s.name for s in default_service_slos().slos]
+    assert names == ["dispatch_p99_ms", "submit_p99_ms", "staleness_p95"]
+    assert [s.name for s in default_sim_slos().slos] == ["straggling_p95"]
+    assert [s.name for s in default_sim_slos(time_to_target=10.0).slos] \
+        == ["straggling_p95", "time_to_target_s"]
+
+
+# --------------------------------------------------------------------- #
+# Prometheus exposition + JSONL stream
+# --------------------------------------------------------------------- #
+def _exercised_registry():
+    r = MetricsRegistry()
+    r.counter("service.agg").inc(3)
+    cv = r.counter_vec("service.counts")
+    cv.inc("dispatch", 5), cv.inc("submit", 2)
+    r.gauge("service.up_bytes").set(123.5)
+    ih = r.int_histogram("service.staleness")
+    ih.observe(0), ih.observe(0), ih.observe(3)
+    h = r.histogram("lat", edges=(0.1, 1.0))
+    h.observe(0.05), h.observe(0.5), h.observe(2.0)
+    res = r.reservoir("service.dispatch_s")
+    for v in (0.001, 0.002, 0.004):
+        res.observe(v)
+    return r
+
+
+def test_prometheus_round_trip_and_stability():
+    r = _exercised_registry()
+    text = prometheus_text(r)
+    assert text == prometheus_text(r)            # byte-stable
+    parsed = parse_prometheus_text(text)
+    assert parsed["hapfl_service_agg_total"][()] == 3.0
+    assert parsed["hapfl_service_counts_total"][(("key", "dispatch"),)] == 5.0
+    assert parsed["hapfl_service_up_bytes"][()] == 123.5
+    # cumulative histogram buckets + +Inf == count
+    ih = parsed["hapfl_service_staleness_bucket"]
+    assert ih[(("le", "0.0"),)] == 2.0 and ih[(("le", "+Inf"),)] == 3.0
+    assert parsed["hapfl_service_staleness_count"][()] == 3.0
+    lat = parsed["hapfl_lat_bucket"]
+    assert lat[(("le", "0.1"),)] == 1.0 and lat[(("le", "+Inf"),)] == 3.0
+    # reservoir summary quantiles
+    q = parsed["hapfl_service_dispatch_s"]
+    assert (("quantile", "0.5"),) in q
+    assert parsed["hapfl_service_dispatch_s_count"][()] == 3.0
+
+
+def test_prometheus_const_labels_and_sanitization(tmp_path):
+    r = MetricsRegistry()
+    r.counter("weird-name.with:stuff").inc(1)
+    text = prometheus_text(r, namespace="ns",
+                           const_labels={"run": "a b\"c\\d\n"})
+    parsed = parse_prometheus_text(text)
+    [(name, series)] = parsed.items()
+    assert name == "ns_weird_name_with:stuff_total"
+    [(labels, v)] = series.items()
+    assert labels == (("run", 'a b"c\\d\n'),) and v == 1.0
+    p = write_prometheus(r, tmp_path / "m.prom", namespace="ns",
+                         const_labels={"run": 'a b"c\\d\n'})
+    assert parse_prometheus_text(p.read_text()) == parsed
+
+
+def test_prometheus_rejects_nonfinite_and_orders_labels():
+    r = MetricsRegistry()
+    r.gauge("g").set(float("inf"))
+    text = prometheus_text(r)
+    assert "hapfl_g +Inf" in text
+    cv = r.counter_vec("v")
+    cv.inc("zz"), cv.inc("aa")
+    lines = [ln for ln in prometheus_text(r).splitlines()
+             if ln.startswith("hapfl_v_total")]
+    assert lines == sorted(lines)                # deterministic label order
+
+
+def test_jsonl_event_log_rotation(tmp_path):
+    path = tmp_path / "ev.jsonl"
+    log = JsonlEventLog(path, max_bytes=200, max_files=2)
+    for i in range(50):
+        log.write({"t": float(i), "event": "tick", "i": i})
+    log.close()
+    assert log.n_written == 50 and log.n_rotations > 0
+    rotated = sorted(p.name for p in tmp_path.glob("ev.jsonl*"))
+    assert path.exists() and f"{path.name}.1" in rotated
+    assert f"{path.name}.{log.max_files + 1}" not in rotated  # bounded
+    for p in tmp_path.glob("ev.jsonl*"):
+        for line in p.read_text().splitlines():
+            ev = json.loads(line)
+            assert ev["event"] == "tick"
+            assert list(ev) == sorted(ev)        # sorted keys on the wire
+
+
+def test_jsonl_context_manager(tmp_path):
+    with JsonlEventLog(tmp_path / "x.jsonl") as log:
+        log.write({"a": 1})
+    assert (tmp_path / "x.jsonl").read_text() == '{"a":1}\n'
+
+
+# --------------------------------------------------------------------- #
+# report generator
+# --------------------------------------------------------------------- #
+def _toy_health():
+    h = FleetHealth(3)
+    h.note_outcome("dispatched", 2)
+    h.note_wave(0, 0.0, 4.0, [0, 1], ["small", "large"], [0.1, 0.2],
+                [1.0, 3.0], [0.2, 0.5])
+    h.note_rl(0, {"ppo1": {"entropy": 1.2, "reward": -0.5,
+                           "n_updates": 0.0}})
+    return h
+
+
+def test_report_renders_attribution_and_slos(tmp_path):
+    slos = SLOSet([SLO("lat", "g", "value", "<=", 10.0)])
+    r = MetricsRegistry()
+    r.gauge("g").set(3.0)
+    slos.evaluate(registry=r)
+    md, data = fleet_health_report(
+        [{"label": "toy run", "health": _toy_health(), "slo": slos,
+          "meta": {"seed": 0}}])
+    assert "# HAPFL fleet health report" in md and "## toy run" in md
+    assert "**local**" in md                  # dominant phase, bolded
+    assert "| lat | 3 | 10" in md
+    sec = data["sections"][0]
+    assert sec["health"]["waves"][0]["dominant_phase"] == "local"
+    assert sec["slo"][0]["status"] == "ok"
+
+
+def test_write_health_report_sibling_json(tmp_path):
+    md_path, json_path = write_health_report(
+        tmp_path / "r.md", [{"label": "x", "health": _toy_health()}])
+    assert md_path.read_text().startswith("# HAPFL fleet health report")
+    data = json.loads(json_path.read_text())
+    assert data["sections"][0]["label"] == "x"
+    # summary()-dict sections render identically to live objects
+    md2, _ = fleet_health_report(
+        [{"label": "x", "health": _toy_health().summary()}])
+    assert md2 == md_path.read_text()
+
+
+# --------------------------------------------------------------------- #
+# integration: scheduler + service
+# --------------------------------------------------------------------- #
+def test_scheduler_populates_health_and_rl_rows():
+    srv = HAPFLServer(FLEnvironment(CFG), seed=3)
+    sched = EventScheduler(srv, BufferedPolicy(buffer_m=2),
+                           eval_accuracy=False, health=True)
+    assert isinstance(sched.health, FleetHealth)
+    assert srv.collect_rl_diag is True            # diag without a tracer
+    res = sched.run(waves=3)
+    h = res.health
+    assert h is not None and h["n_waves"] >= 3
+    for row in h["waves"]:
+        assert row["dominant_phase"] in PHASES
+    assert h["rl"] and set(h["rl"][0]) >= {"wave", "ppo1", "ppo2"}
+    assert h["churn"]["outcomes"]["dispatched"] >= 3
+    assert "store" in h["churn"]
+    json.dumps(h)
+
+
+def test_service_slo_gauges_and_health(tmp_path):
+    from repro.core.latency import AvailabilityModel
+    from repro.service import LoadGenerator, ParamService, poisson_trace
+    srv = HAPFLServer(FLEnvironment(CFG), seed=0)
+    av = AvailabilityModel(CFG.n_clients, mean_on=10.0, mean_off=5.0,
+                           seed=0)
+    svc = ParamService(srv, policy="async", availability=av,
+                       max_inflight=4, min_deadline=6.0, health=True,
+                       slos=default_service_slos(
+                           dispatch_p99_ms=60_000.0,
+                           submit_p99_ms=60_000.0, staleness_p95=64.0),
+                       slo_every=2.0)
+    trace = poisson_trace(60, CFG.n_clients, 2.0, seed=0)
+    LoadGenerator(svc, trace, seed=0).replay()
+    rows = svc.slos.report()
+    assert any(r["checks"] > 0 for r in rows)
+    reg = svc.metrics.registry
+    checked = [r for r in rows if r["checks"] > 0]
+    assert checked
+    for r in checked:
+        assert reg[f"slo.{r['name']}.burn_rate"].value >= 0.0
+        assert reg[f"slo.{r['name']}.ok"].value in (0.0, 1.0)
+    assert svc.metrics.counts[f"slo_{svc.slos.worst_status()}"] >= 1
+    # health waves were attributed from measured turnarounds
+    s = svc.health.summary(store=svc.store)
+    assert s["n_waves"] >= 1
+    for row in s["waves"]:
+        assert row["dominant_phase"] in PHASES
+        # measured turnaround + barrier slack fills the wave span exactly
+        assert math.isclose(sum(row["phases_s"].values()), row["span_s"],
+                            rel_tol=1e-6, abs_tol=1e-3)
+    # slo transition events landed in the structured log
+    assert any(e["event"] == "slo" for e in svc.metrics.events)

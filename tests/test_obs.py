@@ -107,6 +107,38 @@ def test_validate_rejects_broken_traces():
         validate_chrome_trace({"not": "a trace"})
 
 
+def test_validate_rejects_bad_counter_values():
+    tr = Tracer()
+    good = tr.to_chrome()
+    def counter(args):
+        return dict(good, traceEvents=[{"name": "c", "ph": "C", "ts": 0.0,
+                                        "pid": 1, "tid": 0, "args": args}])
+
+    with pytest.raises(ValueError, match="non-finite"):
+        validate_chrome_trace(counter({"x": float("nan")}))
+    with pytest.raises(ValueError, match="non-finite"):
+        validate_chrome_trace(counter({"x": 1.0, "y": float("inf")}))
+    with pytest.raises(ValueError, match="no args series"):
+        validate_chrome_trace(counter({}))
+
+
+def test_validate_rejects_nonmonotonic_counter_track():
+    """Counters with one name form one Perfetto track per pid regardless
+    of tid — a ts regression across tids must be rejected even though
+    each (pid, tid) stream alone is monotone."""
+    base = {"name": "load", "ph": "C", "pid": 1, "args": {"x": 1.0}}
+    trace = {"traceEvents": [dict(base, tid=0, ts=10.0),
+                             dict(base, tid=1, ts=5.0)],
+             "displayTimeUnit": "ms"}
+    with pytest.raises(ValueError, match="counter track"):
+        validate_chrome_trace(trace)
+    # distinct names on the same pid are independent tracks: fine
+    ok = {"traceEvents": [dict(base, tid=0, ts=10.0),
+                          dict(base, name="other", tid=1, ts=5.0)],
+          "displayTimeUnit": "ms"}
+    assert validate_chrome_trace(ok)["n_counters"] == 2
+
+
 def test_wave_timing_summary():
     spans = [{"args": {"assess": 1.0, "local": 2.0, "comm": 0.5,
                        "barrier": 0.25}},
@@ -362,3 +394,46 @@ def test_untraced_rounds_have_no_rl_diag():
     srv = fresh_server()
     srv.run(2)
     assert all(r.rl_diag is None for r in srv.history)
+
+
+# --------------------------------------------------------------------- #
+# fleet health: off = byte-identical, exposition parity
+# --------------------------------------------------------------------- #
+def test_health_off_runs_are_byte_identical():
+    """Attaching a FleetHealth must not perturb the simulation: every
+    output except the observational side channels (rl_diag, health) is
+    byte-identical to a plain run — same discipline as the tracer pin
+    above."""
+    srv_a = fresh_server()
+    res_a = EventScheduler(srv_a, SyncPolicy()).run(waves=3)
+    srv_b = fresh_server()
+    res_b = EventScheduler(srv_b, SyncPolicy(), health=True).run(waves=3)
+    for a, b in zip(srv_a.history, srv_b.history):
+        assert a.rl_diag is None and b.rl_diag is not None
+        da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+        da.pop("rl_diag"), db.pop("rl_diag")
+        assert da == db
+    da, db = dataclasses.asdict(res_a), dataclasses.asdict(res_b)
+    assert da.pop("health") is None and db.pop("health") is not None
+    assert da == db
+    assert res_a.sim_time == res_b.sim_time
+
+
+def test_prometheus_matches_dump_for_deterministic_counters():
+    """Every deterministic ServiceMetrics counter must appear with the
+    same value in the Prometheus exposition and in the dump()/snapshot
+    surface — one stream, two serializations."""
+    from repro.obs.export import parse_prometheus_text
+    m = _exercised_metrics()
+    parsed = parse_prometheus_text(m.prometheus())
+    counts = parsed["hapfl_service_counts_total"]
+    for key, v in m.deterministic_counts().items():
+        assert counts[(("key", key),)] == float(v), key
+    snap = m.snapshot()
+    assert parsed["hapfl_service_up_bytes"][()] == m.up_bytes
+    assert parsed["hapfl_service_down_bytes"][()] == m.down_bytes
+    stal = parsed["hapfl_service_staleness_bucket"]
+    assert stal[(("le", "+Inf"),)] == \
+        sum(int(v) for v in snap["staleness_hist"].values())
+    # exposing twice is byte-stable (scrape determinism)
+    assert m.prometheus() == m.prometheus()

@@ -14,6 +14,8 @@ except ImportError:  # pragma: no cover - exercised in the pinned container
     from repro.utils import proptest as st
 
 from repro.comm.codec import make_codec
+from repro.obs.registry import (Histogram, IntHistogram, Reservoir,
+                                latency_stats)
 from repro.comm.quantize import dequantize, quantize
 from repro.core.aggregation import (aggregation_weights, fedavg_aggregate,
                                     information_entropy, staleness_weights,
@@ -196,3 +198,73 @@ def test_staleness_weights_normalized_monotone(ent, acc, tau, exponent):
     assert w2[0] > w2[1]
     w3 = staleness_weights(ent2, acc2, [tau, tau], exponent)
     np.testing.assert_allclose(w3, [0.5, 0.5], atol=1e-12)
+
+
+# --------------------------------------------------------------------- #
+# observability quantiles vs numpy.percentile (DESIGN.md §16)
+# --------------------------------------------------------------------- #
+@given(st.lists(st.integers(0, 30), min_size=0, max_size=40),
+       st.floats(0.01, 0.99))
+@settings(max_examples=60, deadline=None)
+def test_int_histogram_quantile_is_inverted_cdf(vals, q):
+    """IntHistogram.quantile is exactly the smallest observed value whose
+    cumulative count reaches q*total — numpy's inverted_cdf method."""
+    ih = IntHistogram("ih")
+    for v in vals:
+        ih.observe(v)
+    got = ih.quantile(q)
+    if not vals:
+        assert got is None
+    else:
+        assert got == float(np.percentile(vals, 100.0 * q,
+                                          method="inverted_cdf"))
+        assert got == float(min(vals)) if len(set(vals)) == 1 else True
+
+
+@given(st.lists(st.floats(0.0, 20.0), min_size=0, max_size=50),
+       st.floats(0.01, 0.99))
+@settings(max_examples=60, deadline=None)
+def test_histogram_quantile_within_bucket_width(vals, q):
+    """The interpolated Histogram.quantile shares a bucket with the
+    rank-q order statistic (numpy's inverted_cdf), so it lands within
+    one bucket width of it — and inside the observed value range thanks
+    to the min/max clamping of the open outer buckets."""
+    edges = (1.0, 4.0, 10.0)
+    h = Histogram("h", edges=edges)
+    for v in vals:
+        h.observe(v)
+    got = h.quantile(q)
+    if not vals:
+        assert got is None
+        return
+    lo0, hi_last = min(min(vals), edges[0]), max(max(vals), edges[-1])
+    widths = ([edges[0] - min(lo0, edges[0])]
+              + [b - a for a, b in zip(edges[:-1], edges[1:])]
+              + [max(hi_last, edges[-1]) - edges[-1]])
+    want = float(np.percentile(vals, 100.0 * q, method="inverted_cdf"))
+    assert abs(got - want) <= max(widths) + 1e-9
+    assert min(vals) - 1e-9 <= got <= max(vals) + 1e-9
+    if len(vals) == 1:                 # size-1: exactly that value
+        assert got == pytest.approx(vals[0])
+
+
+@given(st.lists(st.floats(1e-6, 10.0), min_size=0, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_reservoir_and_latency_stats_match_numpy(seconds):
+    """latency_stats (and Reservoir.stats on top of it) reports exactly
+    numpy.percentile of the millisecond samples, rounded at 3 dp."""
+    res = Reservoir("r")
+    for s in seconds:
+        res.observe(s)
+    stats = res.stats()
+    assert stats == latency_stats(seconds)
+    if not seconds:
+        assert stats is None
+        return
+    ms = np.asarray(seconds) * 1e3
+    assert stats["n"] == len(seconds)
+    assert stats["p50_ms"] == round(float(np.percentile(ms, 50)), 3)
+    assert stats["p99_ms"] == round(float(np.percentile(ms, 99)), 3)
+    assert stats["max_ms"] == round(float(ms.max()), 3)
+    if len(seconds) == 1:              # size-1: every stat is the sample
+        assert stats["p50_ms"] == stats["p99_ms"] == stats["max_ms"]
